@@ -1,0 +1,57 @@
+"""Render the §Roofline markdown table from dryrun JSON artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table \
+           artifacts/roofline_baseline.json artifacts/roofline_final.json
+"""
+import json
+import sys
+
+
+WHAT_MOVES = {
+    "compute": "more MXU-efficient tiling / lower-precision matmuls",
+    "memory": "fuse attention chain (flash kernel) / int8 weights in HBM",
+    "collective": "overlap TP collectives with compute; reshard hot tensor",
+}
+
+
+def load(path):
+    rows = json.load(open(path))
+    return {(r["arch"], r["shape"]): r for r in rows}
+
+
+def fmt(r, base=None):
+    def ms(x):
+        return f"{x*1e3:9.1f}"
+
+    delta = ""
+    if base is not None and base["step_time_s"] > 0:
+        ratio = base["step_time_s"] / max(r["step_time_s"], 1e-12)
+        delta = f" | {ratio:5.1f}x"
+    return (
+        f"| {r['arch']} | {r['shape']} | {ms(r['compute_s'])} | "
+        f"{ms(r['memory_s'])} | {ms(r['collective_s'])} | {r['bottleneck']} | "
+        f"{r['useful_flop_ratio']:.2f} | {r['roofline_fraction']*100:5.2f}%"
+        f"{delta} |"
+    )
+
+
+def main():
+    base = load(sys.argv[1])
+    final = load(sys.argv[2]) if len(sys.argv) > 2 else None
+    print(
+        "| arch | shape | compute ms | memory ms | collective ms | "
+        "bottleneck | useful | roofline | speedup vs baseline |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|")
+    keys = sorted(final.keys() if final else base.keys())
+    for k in keys:
+        r = (final or base)[k]
+        print(fmt(r, base.get(k) if final else None))
+    # bottleneck guidance footer
+    print()
+    for b, fix in WHAT_MOVES.items():
+        print(f"* {b}-bound cells: {fix}")
+
+
+if __name__ == "__main__":
+    main()

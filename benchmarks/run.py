@@ -1,0 +1,50 @@
+"""Benchmark runner: one function per paper table/figure + kernel
+micro-benches. Prints ``name,value,derived`` CSV.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables, kernels_bench
+
+    benches = {}
+    benches.update(paper_tables.ALL)
+    benches.update(kernels_bench.ALL)
+    if args.only:
+        keep = args.only.split(",")
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    quick = not args.full
+    print("name,value,derived")
+    failures = 0
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            rows = fn(quick=quick)
+        except Exception as e:  # keep the suite going; report at the end
+            print(f"{name},NaN,ERROR: {e!r}")
+            failures += 1
+            continue
+        for rname, val, derived in rows:
+            print(f'{rname},{val},"{derived}"')
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper-faithful experiment at example scale: ResNet + drift + DoRA
+feature calibration vs LoRA vs backprop (Fig. 4/6 protocol).
+
+Run:  PYTHONPATH=src python examples/calibrate_resnet.py
+"""
+from repro.core.repro_experiments import run_cell
+
+
+def main():
+    print("running 3 calibration methods at drift=0.20, 10 samples "
+          "(ResNet-8 proxy, procedural data)...")
+    for method in ("dora", "lora", "backprop"):
+        r = run_cell(method=method, rank=2, drift=0.20, samples=10,
+                     calib_epochs=10)
+        print(
+            f"{method:9s} teacher={r.teacher_acc:.3f} "
+            f"drifted={r.drifted_acc:.3f} calibrated={r.calibrated_acc:.3f} "
+            f"trainable={r.trainable_fraction:.2%}"
+        )
+
+
+if __name__ == "__main__":
+    main()

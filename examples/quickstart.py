@@ -1,0 +1,62 @@
+"""Quickstart: the paper's mechanism end-to-end in ~60 lines.
+
+1. Build a small LM ("teacher", trained weights stand-in).
+2. Deploy it onto the simulated RRAM crossbar -> conductance drift
+   degrades it (teacher/student disagreement).
+3. Calibrate with feature-based DoRA (Algorithm 1+2): only the SRAM
+   side-cars train; the RRAM array is never written.
+4. Serve with the calibrated student.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core.calibrate import CalibState, make_calib_step, program_model
+from repro.models import transformer as T
+from repro.optim.adam import AdamW, adamw_init
+
+
+def main():
+    arch = get_arch("qwen3-1.7b")
+    cfg = arch.smoke  # reduced same-family config (CPU-friendly)
+    key = jax.random.PRNGKey(0)
+
+    # 1. teacher ("DNN trained on GPU")
+    params = T.init_params(key, cfg)
+
+    # 2. deployment: program + drift (the RRAM array is now FIXED)
+    student_base = program_model(params["base"], cfg.rram, jax.random.PRNGKey(1))
+
+    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab)}
+    t_logits = T.forward(params, batch, cfg, use_adapters=False)
+    s_logits = T.forward(
+        {"base": student_base, "adapters": {}}, batch, cfg, use_adapters=False
+    )
+    gap = float(jnp.mean((t_logits - s_logits).astype(jnp.float32) ** 2))
+    print(f"teacher/student logit MSE after drift: {gap:.5f}")
+
+    # 3. calibration: ONLY adapters train (2-3% of params, zero RRAM writes)
+    state = CalibState(
+        params["base"], student_base, params["adapters"],
+        adamw_init(params["adapters"]), jnp.zeros((), jnp.int32),
+    )
+    step = jax.jit(make_calib_step(cfg, AdamW(lr=3e-3)))
+    for i in range(20):
+        state, metrics = step(state, batch)
+        if i % 5 == 0:
+            print(f"  calib step {i:3d}  feature MSE {float(metrics['loss']):.6f}")
+
+    # 4. calibrated student
+    c_logits = T.forward(
+        {"base": state.student_base, "adapters": state.adapters}, batch, cfg
+    )
+    gap2 = float(jnp.mean((t_logits - c_logits).astype(jnp.float32) ** 2))
+    print(f"teacher/student logit MSE after calibration: {gap2:.5f}")
+    print(f"recovered {100 * (1 - gap2 / gap):.1f}% of the drift gap, "
+          "with zero RRAM writes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines ``ARCH: ArchSpec`` with the exact published config
+(full) and a reduced same-family smoke config.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.shapes import ArchSpec, ShapeSpec, ALL_SHAPES, input_specs  # noqa
+
+ARCH_IDS: List[str] = [
+    "seamless_m4t_large_v2",
+    "gemma3_12b",
+    "qwen3_1_7b",
+    "minitron_8b",
+    "deepseek_coder_33b",
+    "falcon_mamba_7b",
+    "deepseek_v2_lite_16b",
+    "mixtral_8x22b",
+    "paligemma_3b",
+    "recurrentgemma_9b",
+]
+
+# public ids with dashes as listed in the assignment
+ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+ALIASES.update({"qwen3-1.7b": "qwen3_1_7b", "seamless-m4t-large-v2": "seamless_m4t_large_v2"})
+
+
+def get_arch(name: str) -> ArchSpec:
+    key = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.ARCH
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    return {i: get_arch(i) for i in ARCH_IDS}

@@ -1,0 +1,45 @@
+"""deepseek-coder-33b [dense]: 62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256 — llama-arch. [arXiv:2401.14196; hf]"""
+from repro.configs.shapes import ArchSpec, lm_shapes, FULL_ATTN_SKIP
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig
+from repro.models.attention import AttentionConfig
+from repro.models.layers import MlpConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="deepseek-coder-33b",
+    d_model=7168,
+    n_layers=62,
+    vocab=32256,
+    attn=AttentionConfig(
+        d_model=7168, num_heads=56, num_kv_heads=8, head_dim=128,
+        rope_theta=100000.0,
+    ),
+    mlp=MlpConfig(d_model=7168, d_ff=19200, gated=True, activation="silu"),
+    norm="rms",
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=8, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-coder-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,
+    attn=AttentionConfig(d_model=64, num_heads=8, num_kv_heads=2, head_dim=8),
+    mlp=MlpConfig(d_model=64, d_ff=160, gated=True, activation="silu"),
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=4, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+    remat=False,
+)
+
+ARCH = ArchSpec(
+    name="deepseek-coder-33b",
+    full=FULL,
+    smoke=SMOKE,
+    shapes=lm_shapes(subquadratic=False),
+    skips={"long_500k": FULL_ATTN_SKIP},
+)

@@ -1,0 +1,49 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attn-free) vocab=65024,
+ssm_state=16 — mamba1 arch. [arXiv:2410.05355; unverified]
+
+Attention-free: the DoRA side-cars attach to the SSM projections
+(in/x/dt/out) — the paper's technique applies unchanged (DESIGN.md §4).
+long_500k RUNS: O(1) recurrent state.
+"""
+from repro.configs.shapes import ArchSpec, lm_shapes
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig
+from repro.models.ssm import SsmConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="falcon-mamba-7b",
+    d_model=4096,
+    n_layers=64,
+    vocab=65024,
+    ssm=SsmConfig(d_model=4096, d_inner=8192, state_dim=16, conv_kernel=4,
+                  chunk=256),
+    mixer_pattern=("ssm",),
+    ffn_pattern=("none",),
+    norm="rms",
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=8, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,
+    ssm=SsmConfig(d_model=64, d_inner=128, state_dim=8, conv_kernel=4, chunk=16),
+    mixer_pattern=("ssm",),
+    ffn_pattern=("none",),
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=4, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+    remat=False,
+)
+
+ARCH = ArchSpec(
+    name="falcon-mamba-7b",
+    full=FULL,
+    smoke=SMOKE,
+    shapes=lm_shapes(subquadratic=True),
+    skips={},
+)

@@ -1,0 +1,47 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron (squared-ReLU MLP, untied head).
+[arXiv:2407.14679; hf]"""
+from repro.configs.shapes import ArchSpec, lm_shapes, FULL_ATTN_SKIP
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig
+from repro.models.attention import AttentionConfig
+from repro.models.layers import MlpConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="minitron-8b",
+    d_model=4096,
+    n_layers=32,
+    vocab=256000,
+    attn=AttentionConfig(
+        d_model=4096, num_heads=32, num_kv_heads=8, head_dim=128,
+        rope_theta=10000.0,
+    ),
+    mlp=MlpConfig(d_model=4096, d_ff=16384, gated=False, activation="relu"),
+    norm="layer",
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=8, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+)
+
+SMOKE = ModelConfig(
+    name="minitron-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,
+    attn=AttentionConfig(d_model=64, num_heads=4, num_kv_heads=2, head_dim=16),
+    mlp=MlpConfig(d_model=64, d_ff=128, gated=False, activation="relu"),
+    norm="layer",
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=4, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+    remat=False,
+)
+
+ARCH = ArchSpec(
+    name="minitron-8b",
+    full=FULL,
+    smoke=SMOKE,
+    shapes=lm_shapes(subquadratic=False),
+    skips={"long_500k": FULL_ATTN_SKIP},
+)

@@ -1,0 +1,60 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, 8 experts top-2, SWA. [arXiv:2401.04088; hf]
+
+Sliding-window attention (window 4096) bounds the KV cache ->
+long_500k RUNS with a rolling window cache.
+"""
+from repro.configs.shapes import ArchSpec, lm_shapes
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig
+from repro.models.attention import AttentionConfig
+from repro.models.moe import MoeConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="mixtral-8x22b",
+    d_model=6144,
+    n_layers=56,
+    vocab=32768,
+    attn=AttentionConfig(
+        d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+        rope_theta=1e6,
+    ),
+    moe=MoeConfig(
+        d_model=6144, d_ff=16384, n_experts=8, top_k=2, n_shared=0,
+        capacity_factor=1.25, activation="silu",
+    ),
+    mixer_pattern=("swa",),
+    ffn_pattern=("moe",),
+    local_window=4096,
+    norm="rms",
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=8, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,
+    attn=AttentionConfig(d_model=64, num_heads=4, num_kv_heads=2, head_dim=16),
+    moe=MoeConfig(d_model=64, d_ff=128, n_experts=4, top_k=2, n_shared=0,
+                  capacity_factor=2.0),
+    mixer_pattern=("swa",),
+    ffn_pattern=("moe",),
+    local_window=16,
+    tie_lm_head=False,
+    adapter=AdapterConfig(rank=4, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+    remat=False,
+)
+
+ARCH = ArchSpec(
+    name="mixtral-8x22b",
+    full=FULL,
+    smoke=SMOKE,
+    shapes=lm_shapes(subquadratic=True),
+    skips={},
+    notes="long_500k runs: SWA rolling cache bounds memory at window=4096",
+)

@@ -1,0 +1,53 @@
+"""paligemma-3b [vlm]: 18L d_model=2048 8H (GQA kv=1) d_ff=16384
+vocab=257216 — SigLIP + gemma. [arXiv:2407.07726; hf]
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs``
+provides 256 precomputed patch embeddings which attend as a bidirectional
+prefix (prefix-LM masking); the gemma text backbone is fully modeled.
+"""
+from repro.configs.shapes import ArchSpec, lm_shapes, FULL_ATTN_SKIP
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig
+from repro.models.attention import AttentionConfig
+from repro.models.layers import MlpConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="paligemma-3b",
+    d_model=2048,
+    n_layers=18,
+    vocab=257216,
+    attn=AttentionConfig(
+        d_model=2048, num_heads=8, num_kv_heads=1, head_dim=256,
+        rope_theta=10000.0,
+    ),
+    mlp=MlpConfig(d_model=2048, d_ff=16384, gated=True, activation="gelu_tanh"),
+    norm="rms",
+    embed_scale=True,
+    tie_lm_head=True,
+    vision_tokens=256,
+    adapter=AdapterConfig(rank=8, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+)
+
+SMOKE = ModelConfig(
+    name="paligemma-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,
+    attn=AttentionConfig(d_model=64, num_heads=4, num_kv_heads=1, head_dim=16),
+    mlp=MlpConfig(d_model=64, d_ff=128, gated=True, activation="gelu_tanh"),
+    embed_scale=True,
+    vision_tokens=8,
+    adapter=AdapterConfig(rank=4, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+    remat=False,
+)
+
+ARCH = ArchSpec(
+    name="paligemma-3b",
+    full=FULL,
+    smoke=SMOKE,
+    shapes=lm_shapes(subquadratic=False),
+    skips={"long_500k": FULL_ATTN_SKIP},
+)

@@ -1,0 +1,56 @@
+"""seamless-m4t-large-v2 [audio]: 24L d_model=1024 16H (MHA kv=16)
+d_ff=8192 vocab=256206 — encoder-decoder, multimodal.
+[arXiv:2308.11596; hf]
+
+The audio (conformer) frontend is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings to the 24-layer
+text/speech encoder; the 24-layer decoder adds cross-attention. "24L" is
+read as 24 encoder + 24 decoder (the HF large-v2 layout).
+"""
+from repro.configs.shapes import ArchSpec, lm_shapes, FULL_ATTN_SKIP
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig
+from repro.models.attention import AttentionConfig
+from repro.models.layers import MlpConfig
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="seamless-m4t-large-v2",
+    d_model=1024,
+    n_layers=24,
+    vocab=256206,
+    attn=AttentionConfig(
+        d_model=1024, num_heads=16, num_kv_heads=16, head_dim=64,
+        rope_theta=10000.0,
+    ),
+    mlp=MlpConfig(d_model=1024, d_ff=8192, gated=False, activation="gelu"),
+    norm="layer",
+    tie_lm_head=False,
+    encoder_layers=24,
+    adapter=AdapterConfig(rank=8, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+)
+
+SMOKE = ModelConfig(
+    name="seamless-smoke",
+    d_model=64,
+    n_layers=4,
+    vocab=512,
+    attn=AttentionConfig(d_model=64, num_heads=4, num_kv_heads=4, head_dim=16),
+    mlp=MlpConfig(d_model=64, d_ff=128, gated=False, activation="gelu"),
+    norm="layer",
+    tie_lm_head=False,
+    encoder_layers=2,
+    adapter=AdapterConfig(rank=4, kind="dora"),
+    rram=RramConfig(relative_drift=0.10),
+    remat=False,
+)
+
+ARCH = ArchSpec(
+    name="seamless-m4t-large-v2",
+    full=FULL,
+    smoke=SMOKE,
+    shapes=lm_shapes(subquadratic=False),
+    skips={"long_500k": FULL_ATTN_SKIP},
+    enc_src_len=4096,
+)

@@ -1,0 +1,95 @@
+"""Assigned input-shape sets and abstract input construction.
+
+Every LM arch is paired with the four assigned shapes; ``long_500k`` is
+included only for sub-quadratic archs (SSM / hybrid / SWA) — pure
+full-attention archs skip it with a recorded reason (DESIGN.md §4).
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins only — no device
+allocation ever happens here (dry-run discipline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeSpec("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeSpec("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeSpec("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeSpec("long_500k", "decode", 524288, 1)
+
+ALL_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """One assigned architecture: exact full config + reduced smoke config
+    + its shape cells."""
+
+    name: str
+    full: object  # ModelConfig
+    smoke: object  # ModelConfig
+    # shape name -> ShapeSpec for supported cells
+    shapes: Dict[str, ShapeSpec]
+    # shape name -> reason string for skipped cells
+    skips: Dict[str, str]
+    # encoder source length (enc-dec archs): frames provided by the stub
+    enc_src_len: int = 0
+    # vision prefix tokens provided by the stub (vlm archs)
+    notes: str = ""
+
+
+def lm_shapes(*, subquadratic: bool, decoder: bool = True) -> Dict[str, ShapeSpec]:
+    shapes = {"train_4k": TRAIN_4K, "prefill_32k": PREFILL_32K}
+    if decoder:
+        shapes["decode_32k"] = DECODE_32K
+        if subquadratic:
+            shapes["long_500k"] = LONG_500K
+    return shapes
+
+
+FULL_ATTN_SKIP = (
+    "long_500k skipped: full (quadratic) attention layers — 512k dense KV "
+    "cache/attention is out of scope for this arch family (DESIGN.md §4)"
+)
+
+
+def input_specs(arch: ArchSpec, shape: ShapeSpec, *, smoke: bool = False) -> Dict:
+    """Abstract inputs for the step lowered for this (arch, shape) cell.
+
+    train/prefill: {tokens (B,S) i32 [, enc_embeds (B,S_src,d)]
+                    [, patch_embeds (B,P,d)]}
+    decode:        {tokens (B,1) i32, pos scalar i32}
+    Cache/abstract-state specs are built separately via jax.eval_shape on
+    the model's init_cache (see launch/dryrun.py).
+    """
+    cfg = arch.smoke if smoke else arch.full
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.encoder_layers:
+            src = min(arch.enc_src_len or s, s)
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (b, src, cfg.d_model), jnp.bfloat16
+            )
+        if cfg.vision_tokens:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    # decode: one new token against a cache of length shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

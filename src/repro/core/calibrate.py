@@ -1,0 +1,399 @@
+"""Calibration engine (paper Algorithm 1 + 2).
+
+Two entry points:
+
+* ``program_model`` — the "deployment" event: every RRAM-resident weight in
+  a base pytree is programmed onto the simulated crossbar and drifted
+  (deterministic per-leaf keys). Digital peripherals (norms, embeddings,
+  conv kernels, SSM A/D, gates' biases, lambda) are left untouched.
+
+* ``CalibrationLoop`` — the layer-wise feature-KD loop for the LM stacks
+  (single jitted step over all layers; see
+  ``transformer.feature_calibration_loss`` for why that is exactly
+  Algorithm 1), with convergence thresholds and epoch caps per the paper.
+
+The CNN reproduction (``core/resnet.py``) uses the literal per-layer loop
+(`calibrate_layerwise`) to match the paper's procedure one-to-one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rram
+from repro.core.rram import RramConfig
+from repro.optim.adam import AdamW, adamw_init, adamw_update
+
+Pytree = Any
+
+# Leaf names that live in RRAM (weights that participate in MVMs).
+RRAM_LEAF_NAMES = ("w", "gate_w", "up_w", "down_w")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _is_rram_leaf(path) -> bool:
+    last = path[-1]
+    name = getattr(last, "key", None)
+    return name in RRAM_LEAF_NAMES
+
+
+def program_model(
+    base: Pytree,
+    cfg: RramConfig,
+    key: jax.Array,
+) -> Pytree:
+    """Program + drift every RRAM-resident leaf; returns the student base.
+
+    Deterministic: each leaf's drift key is ``fold_in(key, hash(path))`` so
+    re-programming with the same key reproduces the same deployment state
+    (this is what makes on-restart recovery exact — see runtime/fault.py).
+    """
+
+    def leaf(path, x):
+        if not _is_rram_leaf(path):
+            return x
+        # zlib.crc32 is stable across processes (builtin hash() is salted,
+        # which would break exact recovery-on-restart).
+        h = jnp.uint32(zlib.crc32(_path_str(path).encode()))
+        k = jax.random.fold_in(key, h)
+        if x.ndim == 2:
+            return rram.drifted_weights(x, cfg, k, dtype=x.dtype)
+        # stacked weights: (E, d, k) experts or (G, ..., d, k) scan bodies —
+        # program each matrix; drift is i.i.d. so one vmapped call suffices.
+        lead = x.shape[:-2]
+        flat = x.reshape((-1,) + x.shape[-2:])
+        keys = jax.random.split(k, flat.shape[0])
+        out = jax.vmap(
+            lambda w, kk: rram.drifted_weights(w, cfg, kk, dtype=x.dtype)
+        )(flat, keys)
+        return out.reshape(lead + x.shape[-2:])
+
+    return jax.tree_util.tree_map_with_path(leaf, base)
+
+
+def rram_bytes(base: Pytree) -> int:
+    """Bytes of weights resident in RRAM (differential uint8 pairs)."""
+    total = 0
+
+    def leaf(path, x):
+        nonlocal total
+        if _is_rram_leaf(path):
+            total += 2 * x.size  # G+ and G- codes, 1 byte each
+        return x
+
+    jax.tree_util.tree_map_with_path(leaf, base)
+    return total
+
+
+def merge_adapters_for_serve(base: Pytree, adapters: Pytree) -> Pytree:
+    """Algorithm 2 line 12 over a whole model: replace every DoRA
+    ``dora_m`` with ``dora_m_merged = M / ||W_r + A@B||_col`` so serving
+    never recomputes weight-sized norms (§Perf H-6).
+
+    Walks base/adapters jointly; adapter dicts are recognized by their
+    ``lora_a`` leaf, and the paired base weight is the sibling RRAM leaf.
+    """
+    from repro.core import dora as dora_lib
+    from repro.models.moe import _stacked_column_norm
+
+    def walk(b, a):
+        if isinstance(a, dict) and "lora_a" in a:
+            if "dora_m" not in a:
+                return a  # LoRA: nothing to merge
+            w = b["w"] if isinstance(b, dict) and "w" in b else b
+            m = a["dora_m"].astype(jnp.float32)
+            # disambiguate by lora_b rank: (r,k) plain/conv; (E,r,k)
+            # stacked (experts OR scan groups — same math); (G,E,r,k)
+            # scan-stacked expert stacks.
+            lb = a["lora_b"]
+            if lb.ndim == 2 and w.ndim == 4:  # conv (kh,kw,cin,cout)
+                norm = dora_lib.conv_column_norm(w, a["lora_a"], lb)
+            elif lb.ndim == 2:
+                norm = dora_lib.column_norm(w, a["lora_a"], lb)
+            elif lb.ndim == 3:
+                norm = _stacked_column_norm(w, a["lora_a"], lb)
+            else:
+                norm = jax.vmap(_stacked_column_norm)(w, a["lora_a"], lb)
+            out = {k: v for k, v in a.items() if k != "dora_m"}
+            out["dora_m_merged"] = m / norm
+            return out
+        if isinstance(a, dict):
+            return {
+                k: walk(b[k] if isinstance(b, dict) and k in b else b, v)
+                for k, v in a.items()
+            }
+        if isinstance(a, list):
+            return [walk(b[i], v) for i, v in enumerate(a)]
+        return a
+
+    return walk(base, adapters)
+
+
+# ---------------------------------------------------------------------------
+# Literal per-layer calibration loop (Algorithm 1) — used by the CNN repro
+# and exposed for any model that provides per-layer (forward, params).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerCalibResult:
+    losses: list
+    epochs_run: int
+
+
+def calibrate_layer(
+    layer_fn: Callable[[Pytree, Pytree, jax.Array], jax.Array],
+    student_layer_base: Pytree,
+    adapter: Pytree,
+    teacher_in: jax.Array,
+    teacher_out: jax.Array,
+    *,
+    opt: AdamW = AdamW(lr=1e-3),
+    max_epochs: int = 20,
+    loss_threshold: float = 0.0,
+    batch_size: Optional[int] = None,
+) -> Tuple[Pytree, LayerCalibResult]:
+    """Algorithm 1 lines 5-10 for a single layer.
+
+    ``layer_fn(base, adapter, x) -> y``. ``teacher_in/out`` are the cached
+    clean features for the calibration samples (N leading dim).
+    Runs ``max_epochs`` epochs of full-batch Adam (paper uses batch 1 over
+    10 samples; full-batch over <=10 samples is the same data regime and
+    jit-friendlier — ``batch_size`` restores per-sample updates if set).
+    """
+    opt_state = adamw_init(adapter)
+
+    def loss_fn(ad, x, y):
+        pred = layer_fn(student_layer_base, ad, x)
+        d = pred.astype(jnp.float32) - y.astype(jnp.float32)
+        return jnp.mean(d * d)
+
+    @jax.jit
+    def step(ad, opt_state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(ad, x, y)
+        ad, opt_state = adamw_update(grads, opt_state, ad, opt)
+        return ad, opt_state, loss
+
+    n = teacher_in.shape[0]
+    bs = batch_size or n
+    losses = []
+    epochs_run = 0
+    for epoch in range(max_epochs):
+        epoch_loss = 0.0
+        for i in range(0, n, bs):
+            adapter, opt_state, loss = step(
+                adapter, opt_state, teacher_in[i : i + bs], teacher_out[i : i + bs]
+            )
+            epoch_loss += float(loss) * min(bs, n - i)
+        epoch_loss /= n
+        losses.append(epoch_loss)
+        epochs_run = epoch + 1
+        if epoch_loss <= loss_threshold:
+            break
+    return adapter, LayerCalibResult(losses=losses, epochs_run=epochs_run)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model jitted calibration state (LM stacks) — built by launch/train.py
+# ---------------------------------------------------------------------------
+
+
+class CalibState:
+    """Plain pytree container: (teacher_base, student_base, adapters,
+    opt_state, step). Registered as a pytree for jit/pjit."""
+
+    def __init__(self, teacher_base, student_base, adapters, opt_state, step):
+        self.teacher_base = teacher_base
+        self.student_base = student_base
+        self.adapters = adapters
+        self.opt_state = opt_state
+        self.step = step
+
+    def tree_flatten(self):
+        return (
+            (self.teacher_base, self.student_base, self.adapters,
+             self.opt_state, self.step),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    CalibState, CalibState.tree_flatten, CalibState.tree_unflatten
+)
+
+
+def teacher_features(teacher_base, batch, cfg):
+    """Algorithm 1 line 3: run the frozen teacher ONCE over the calibration
+    batch and cache every block's input/output. With ~10 calibration
+    samples the same features serve every epoch — the per-step teacher
+    recompute (≈⅓ of step FLOPs and bytes) is amortized away (§Perf H-9).
+
+    Supported for single-stack decoders (enc-dec/VLM keep the fused path).
+    Returns (L+1, B, S, d): block inputs, plus the final block output.
+    """
+    from repro.models import transformer as T
+    import jax.numpy as jnp
+
+    assert not cfg.encoder_layers and not cfg.vision_tokens, (
+        "cached-teacher calibration currently supports single-stack decoders"
+    )
+    base = teacher_base
+    h = T.L.embed(batch["tokens"], base["embed"],
+                  scale_by_sqrt_dim=cfg.embed_scale)
+    s = h.shape[1]
+    positions = jnp.arange(s)[None]
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    feats = [h]
+
+    def run(h, b, kind):
+        mixer, ffn = kind
+        return T.block_forward(h, b, {}, cfg, mixer, ffn, positions=positions)
+
+    for i in range(pro):
+        h = run(h, base["prologue"][i], kinds[i])
+        feats.append(h)
+    if n_groups:
+        body_kinds = [kinds[pro + j] for j in range(p)]
+
+        def group(h, bs):
+            outs = []
+            for j in range(p):
+                h = run(h, bs[j], body_kinds[j])
+                outs.append(h)
+            return h, jnp.stack(outs)
+
+        h, ys = jax.lax.scan(group, h, base["body"])  # ys: (G, p, B, S, d)
+        feats.extend(list(ys.reshape((-1,) + ys.shape[2:])))
+    for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+        h = run(h, base["epilogue"][j], kinds[i])
+        feats.append(h)
+    return jnp.stack(feats)  # (L+1, B, S, d)
+
+
+def make_cached_calib_step(cfg, opt: AdamW = AdamW(lr=1e-3)):
+    """Calibration step against cached teacher features: each student
+    block sees feats[l] and matches feats[l+1]. Teacher forward cost: 0."""
+    from repro.models import transformer as T
+    import jax.numpy as jnp
+
+    def step(state: CalibState, feats, batch):
+        s = feats.shape[2]
+        positions = jnp.arange(s)[None]
+        kinds = cfg.layer_kinds()
+        pro, n_groups, epi = cfg.body_layout()
+        p = cfg.scan_period
+        sbase = state.student_base
+
+        def loss_fn(adapters):
+            loss = jnp.zeros((), jnp.float32)
+
+            def pair(l, b, a_, kind):
+                mixer, ffn = kind
+                s_out = T.block_forward(
+                    feats[l], b, a_, cfg, mixer, ffn, positions=positions
+                )
+                d = (feats[l + 1] - s_out).astype(jnp.float32)
+                return jnp.mean(d * d)
+
+            for i in range(pro):
+                loss += pair(i, sbase["prologue"][i], adapters["prologue"][i],
+                             kinds[i])
+            if n_groups:
+                body_kinds = [kinds[pro + j] for j in range(p)]
+                body_feats = feats[pro:pro + n_groups * p + 1]
+
+                def group(carry, xs):
+                    acc, idx = carry
+                    bs, as_ = xs
+                    for j in range(p):
+                        mixer, ffn = body_kinds[j]
+                        fin = jax.lax.dynamic_index_in_dim(
+                            body_feats, idx * p + j, keepdims=False
+                        )
+                        fout = jax.lax.dynamic_index_in_dim(
+                            body_feats, idx * p + j + 1, keepdims=False
+                        )
+                        s_out = T.block_forward(
+                            fin, bs[j], as_[j], cfg, mixer, ffn,
+                            positions=positions,
+                        )
+                        d = (fout - s_out).astype(jnp.float32)
+                        acc = acc + jnp.mean(d * d)
+                    return (acc, idx + 1), None
+
+                (loss, _), _ = jax.lax.scan(
+                    group, (loss, 0),
+                    (sbase["body"], adapters.get("body")),
+                )
+            for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+                loss += pair(
+                    pro + n_groups * p + j, sbase["epilogue"][j],
+                    adapters["epilogue"][j], kinds[i],
+                )
+            return loss / cfg.n_layers
+
+        loss, grads = jax.value_and_grad(loss_fn)(state.adapters)
+        adapters, opt_state = adamw_update(
+            grads, state.opt_state, state.adapters, opt
+        )
+        new_state = CalibState(
+            state.teacher_base, state.student_base, adapters, opt_state,
+            state.step + 1,
+        )
+        return new_state, {"loss": loss}
+
+    return step
+
+
+def make_calib_step(
+    cfg,
+    opt: AdamW = AdamW(lr=1e-3),
+):
+    """Build the jittable whole-model calibration step for an LM config."""
+    from repro.models import transformer as T
+
+    def calib_step(state: CalibState, batch: Dict) -> Tuple[CalibState, Dict]:
+        def loss_fn(adapters):
+            return T.feature_calibration_loss(
+                state.teacher_base, state.student_base, adapters, batch, cfg
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.adapters
+        )
+        adapters, opt_state = adamw_update(
+            grads, state.opt_state, state.adapters, opt
+        )
+        new_state = CalibState(
+            state.teacher_base,
+            state.student_base,
+            adapters,
+            opt_state,
+            state.step + 1,
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return calib_step

@@ -1,0 +1,261 @@
+"""DoRA / LoRA adapters for RIMC calibration (paper §III-C, Algorithm 2).
+
+A ``RimcLinear`` is the paper's unit of compensation: a frozen, drifted
+base weight (the RRAM crossbar) plus small trainable digital parameters
+("SRAM"):
+
+  LoRA:  Y = X @ W_r + (X @ A) @ B                            (eq. 5)
+  DoRA:  Y = M ∘ normalize(X @ W_r + (X @ A) @ B)             (training)
+         Y = M' ∘ (X @ W_r + (X @ A) @ B)                     (inference,
+                      M' = M / ||column||, merged by Algorithm 2 line 12)
+
+where A ∈ R^{d×r} (random init), B ∈ R^{r×k} (zeros — adapter starts as
+identity), M ∈ R^{1×k} initialized to the column L2 norm of the *drifted*
+base weight so the initial DoRA output equals the plain drifted output.
+
+Following the DoRA paper/Algorithm 2 we treat ``normalize`` as dividing by
+the column norm of the *adapted weight* ``W_r + A@B`` (weight-space view);
+this is algebraically identical to scaling the output features per column
+and keeps inference a single fused epilogue.
+
+The ratio of trainable parameters is eq. 7:
+  gamma = (d*r + r*k + k) / (d*k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    rank: int = 4
+    # 'dora' | 'lora' | 'none'. 'none' -> base weight only (pure RRAM).
+    kind: str = "dora"
+    # dtype of the adapter parameters ("SRAM" side). fp32 during training
+    # per the paper; int8 PTQ at inference is exercised in tests.
+    dtype: object = jnp.float32
+
+
+def param_ratio(d: int, k: int, r: int) -> float:
+    """Eq. 7: proportion of new parameters introduced by DoRA."""
+    return (d * r + r * k + k) / (d * k)
+
+
+def init_adapter(
+    key: jax.Array,
+    d: int,
+    k: int,
+    cfg: AdapterConfig,
+    w_base: Optional[jax.Array] = None,
+) -> dict:
+    """Initialize (A, B, M) per Algorithm 2 line 2.
+
+    A: kaiming-uniform random, B: zeros, M: column L2 norm of the base
+    weight (so initialization is output-preserving). When ``w_base`` is not
+    supplied (abstract init for the dry-run) M starts at ones and is
+    re-normalized on first use.
+    """
+    if cfg.kind == "none":
+        return {}
+    r = cfg.rank
+    bound = 1.0 / math.sqrt(d)
+    a = jax.random.uniform(key, (d, r), cfg.dtype, -bound, bound)
+    b = jnp.zeros((r, k), cfg.dtype)
+    out = {"lora_a": a, "lora_b": b}
+    if cfg.kind == "dora":
+        if w_base is not None:
+            m = jnp.linalg.norm(w_base.astype(jnp.float32), axis=0)
+        else:
+            m = jnp.ones((k,), jnp.float32)
+        out["dora_m"] = m.astype(cfg.dtype)
+    return out
+
+
+def column_norm(
+    w_base: jax.Array, a: jax.Array, b: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    """||W_r + A@B||_2 per column, computed without materializing A@B in
+    low precision: norm² = colnorm²(W) + 2·col(Wᵀ(A@B)) + colnorm²(A@B).
+
+    For small r this is cheaper than forming W + A@B when W is quantized/
+    bf16 and we want an f32 norm: each term is a (d,r)/(r,k) contraction.
+    """
+    wf = w_base.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    w_sq = jnp.sum(wf * wf, axis=0)  # (k,)
+    # cross term: sum_d W[d,k] * (A@B)[d,k] = sum_r (WᵀA)[k,r]·B[r,k]
+    wta = wf.T @ af  # (k, r)
+    cross = jnp.einsum("kr,rk->k", wta, bf)
+    ab_sq = jnp.sum((af @ bf) ** 2, axis=0) if a.shape[1] <= 64 else None
+    if ab_sq is None:  # pragma: no cover - large-r fallback
+        ab = af @ bf
+        ab_sq = jnp.sum(ab * ab, axis=0)
+    return jnp.sqrt(jnp.maximum(w_sq + 2.0 * cross + ab_sq, eps))
+
+
+def adapted_forward(
+    x: jax.Array,
+    w_base: jax.Array,
+    adapter: dict,
+    cfg: AdapterConfig,
+    *,
+    merged_norm: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Forward through base + adapter (Algorithm 2 lines 5-7).
+
+    x: (..., d); w_base: (d, k) frozen drifted weight.
+    merged_norm: optional precomputed ||W_r + A@B|| column norms. When given
+    (inference path after Algorithm 2 line 12's merge) the normalization is
+    a static per-column scale; when None (training) the norm is recomputed
+    from the live adapter so its gradient flows into A and B as in DoRA.
+    """
+    compute_dtype = x.dtype
+    y = x @ w_base.astype(compute_dtype)
+    if cfg.kind == "none" or not adapter:
+        return y
+    a = adapter["lora_a"].astype(compute_dtype)
+    b = adapter["lora_b"].astype(compute_dtype)
+    y = y + (x @ a) @ b
+    if cfg.kind == "lora":
+        return y
+    if "dora_m_merged" in adapter:
+        # Algorithm 2 line 12: M already divided by ||W_r + A@B|| at
+        # deployment — per-step norm recompute (a weight-sized f32 op that
+        # also forced SPMD weight gathers) is gone (§Perf H-6).
+        return y * adapter["dora_m_merged"].astype(compute_dtype)
+    m = adapter["dora_m"].astype(jnp.float32)
+    if merged_norm is None:
+        norm = column_norm(w_base, adapter["lora_a"], adapter["lora_b"])
+    else:
+        norm = merged_norm
+    scale = (m / norm).astype(compute_dtype)
+    return y * scale
+
+
+def merge_magnitude(
+    w_base: jax.Array, adapter: dict, cfg: AdapterConfig
+) -> Optional[jax.Array]:
+    """Algorithm 2 line 12: precompute ||W_r + A@B|| for inference.
+
+    Returns the merged column norms (to pass as ``merged_norm``), or None
+    for non-DoRA adapters.
+    """
+    if cfg.kind != "dora" or not adapter:
+        return None
+    return column_norm(w_base, adapter["lora_a"], adapter["lora_b"])
+
+
+def quantize_adapter_int8(adapter: dict) -> dict:
+    """Paper §III-C: adapters are stored int8 at inference. Symmetric
+    per-tensor PTQ; returns {name: (codes_int8, scale_f32)}."""
+    out = {}
+    for name, v in adapter.items():
+        absmax = jnp.maximum(jnp.max(jnp.abs(v)), 1e-8)
+        scale = absmax / 127.0
+        codes = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+        out[name] = (codes, scale)
+    return out
+
+
+def dequantize_adapter_int8(qadapter: dict, dtype=jnp.float32) -> dict:
+    return {
+        name: (codes.astype(jnp.float32) * scale).astype(dtype)
+        for name, (codes, scale) in qadapter.items()
+    }
+
+
+def adapter_param_count(d: int, k: int, cfg: AdapterConfig) -> int:
+    if cfg.kind == "none":
+        return 0
+    n = d * cfg.rank + cfg.rank * k
+    if cfg.kind == "dora":
+        n += k
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Convolutional DoRA (for the paper-faithful ResNet reproduction)
+# ---------------------------------------------------------------------------
+#
+# A conv weight (kh, kw, cin, cout) is logically the matmul weight
+# (d = kh*kw*cin, k = cout) over im2col patches. The low-rank path is
+# realized as a (kh, kw, cin, r) conv followed by a 1x1 (r, cout) conv, and
+# M scales output channels — the direct conv analogue of Algorithm 2.
+
+
+def init_conv_adapter(
+    key: jax.Array,
+    kh: int,
+    kw: int,
+    cin: int,
+    cout: int,
+    cfg: AdapterConfig,
+    w_base: Optional[jax.Array] = None,
+) -> dict:
+    if cfg.kind == "none":
+        return {}
+    d = kh * kw * cin
+    bound = 1.0 / math.sqrt(d)
+    a = jax.random.uniform(key, (kh, kw, cin, cfg.rank), cfg.dtype, -bound, bound)
+    b = jnp.zeros((cfg.rank, cout), cfg.dtype)
+    out = {"lora_a": a, "lora_b": b}
+    if cfg.kind == "dora":
+        if w_base is not None:
+            m = jnp.linalg.norm(
+                w_base.astype(jnp.float32).reshape(-1, cout), axis=0
+            )
+        else:
+            m = jnp.ones((cout,), jnp.float32)
+        out["dora_m"] = m.astype(cfg.dtype)
+    return out
+
+
+def conv_column_norm(
+    w_base: jax.Array, a: jax.Array, b: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    cout = w_base.shape[-1]
+    wf = w_base.astype(jnp.float32).reshape(-1, cout)
+    af = a.astype(jnp.float32).reshape(-1, a.shape[-1])
+    bf = b.astype(jnp.float32)
+    ab = af @ bf
+    return jnp.sqrt(jnp.maximum(jnp.sum((wf + ab) ** 2, axis=0), eps))
+
+
+def adapted_conv_forward(
+    x: jax.Array,
+    w_base: jax.Array,
+    adapter: dict,
+    cfg: AdapterConfig,
+    *,
+    stride: Tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+) -> jax.Array:
+    """NHWC conv through drifted base + DoRA/LoRA side-car."""
+    dn = jax.lax.conv_dimension_numbers(
+        x.shape, w_base.shape, ("NHWC", "HWIO", "NHWC")
+    )
+    y = jax.lax.conv_general_dilated(
+        x, w_base.astype(x.dtype), stride, padding, dimension_numbers=dn
+    )
+    if cfg.kind == "none" or not adapter:
+        return y
+    a = adapter["lora_a"].astype(x.dtype)
+    b = adapter["lora_b"].astype(x.dtype)
+    dn_a = jax.lax.conv_dimension_numbers(
+        x.shape, a.shape, ("NHWC", "HWIO", "NHWC")
+    )
+    xa = jax.lax.conv_general_dilated(
+        x, a, stride, padding, dimension_numbers=dn_a
+    )
+    y = y + xa @ b
+    if cfg.kind == "lora":
+        return y
+    m = adapter["dora_m"].astype(jnp.float32)
+    norm = conv_column_norm(w_base, adapter["lora_a"], adapter["lora_b"])
+    return y * (m / norm).astype(x.dtype)

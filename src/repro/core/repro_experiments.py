@@ -1,0 +1,300 @@
+"""End-to-end experiment harness for the paper-faithful reproduction.
+
+Implements the experimental protocol of §IV on the ResNet-CIFAR family +
+procedural data (core/resnet.py): teacher training, drift injection,
+feature-based DoRA/LoRA calibration (Algorithm 1+2), and the
+backpropagation baseline the paper compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibrate, dora, resnet
+from repro.core.dora import AdapterConfig
+from repro.core.resnet import ResnetConfig
+from repro.core.rram import RramConfig
+from repro.optim.adam import AdamW, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# teacher training ("DNN trained on GPU", Algorithm 1 line 1)
+# ---------------------------------------------------------------------------
+
+
+def train_teacher(
+    key: jax.Array,
+    cfg: ResnetConfig,
+    images: jax.Array,
+    labels: jax.Array,
+    *,
+    epochs: int = 12,
+    batch: int = 128,
+    lr: float = 1e-3,
+) -> Dict:
+    base = resnet.init_resnet(key, cfg)
+    opt = AdamW(lr=lr)
+    # trainable: conv/fc weights + BN scale/bias (not running stats)
+    opt_state = adamw_init(base)
+
+    def loss_fn(params, x, y):
+        logits, aux = resnet.forward(params, x, cfg, training_bn=True)
+        ce = -jnp.mean(
+            jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y]
+        )
+        return ce, aux["bn_stats"]
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        (loss, bn_stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, x, y
+        )
+        # freeze BN running stats against gradient updates
+        grads = _zero_bn_stat_grads(grads)
+        params, opt_state = adamw_update(grads, opt_state, params, opt)
+        params = resnet.apply_bn_stats(params, bn_stats)
+        return params, opt_state, loss
+
+    n = images.shape[0]
+    steps_per_epoch = max(1, n // batch)
+    perm_key = key
+    for e in range(epochs):
+        perm_key, sub = jax.random.split(perm_key)
+        perm = jax.random.permutation(sub, n)
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch : (s + 1) * batch]
+            base, opt_state, loss = step(base, opt_state, images[idx], labels[idx])
+    return base
+
+
+def _zero_bn_stat_grads(grads):
+    def leaf(path, g):
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("mean", "var"):
+            return jnp.zeros_like(g)
+        return g
+
+    return jax.tree_util.tree_map_with_path(leaf, grads)
+
+
+# ---------------------------------------------------------------------------
+# drift injection (the "deployment" event)
+# ---------------------------------------------------------------------------
+
+
+def make_student(base: Dict, relative_drift: float, key: jax.Array) -> Dict:
+    rcfg = RramConfig(relative_drift=relative_drift)
+    return calibrate.program_model(base, rcfg, key)
+
+
+# ---------------------------------------------------------------------------
+# feature-based calibration (Algorithm 1 over the whole net, layer-local)
+# ---------------------------------------------------------------------------
+
+
+def calibration_loss_resnet(
+    teacher: Dict, student: Dict, adapters: Dict, images: jax.Array,
+    cfg: ResnetConfig,
+) -> jax.Array:
+    """Interleaved teacher/student walk: every student conv sees the
+    TEACHER's input activation, so per-conv MSE gradients never cross
+    layers — exactly Algorithm 1 as one jittable step (DESIGN.md §2)."""
+    acfg = cfg.adapter
+
+    def pair_conv(h_t, tb, sb, ad, stride=1):
+        t_out = resnet._conv(h_t, tb, None, acfg, stride)
+        s_out = resnet._conv(h_t, sb, ad, acfg, stride)
+        d = (t_out - s_out).astype(jnp.float32)
+        return t_out, jnp.mean(d * d)
+
+    loss = jnp.zeros(())
+    h, l0 = pair_conv(images, teacher["stem"], student["stem"], adapters["stem"])
+    loss += l0
+    h, _ = resnet._bn(h, teacher["stem_bn"], False)
+    h = jax.nn.relu(h)
+    for i, tblk in enumerate(teacher["blocks"]):
+        sblk = student["blocks"][i]
+        ablk = adapters["blocks"][i]
+        stride = resnet.block_stride(cfg, i)
+        y, l1 = pair_conv(h, tblk["conv1"], sblk["conv1"], ablk.get("conv1"), stride)
+        loss += l1
+        y, _ = resnet._bn(y, tblk["bn1"], False)
+        y = jax.nn.relu(y)
+        y2, l2 = pair_conv(y, tblk["conv2"], sblk["conv2"], ablk.get("conv2"))
+        loss += l2
+        y2, _ = resnet._bn(y2, tblk["bn2"], False)
+        sc = h
+        if "proj" in tblk:
+            sc, lp = pair_conv(h, tblk["proj"], sblk["proj"], ablk.get("proj"), stride)
+            loss += lp
+            sc, _ = resnet._bn(sc, tblk["proj_bn"], False)
+        h = jax.nn.relu(y2 + sc)
+    feat = jnp.mean(h, axis=(1, 2))
+    t_log = feat @ teacher["fc"]["w"]
+    s_log = dora.adapted_forward(feat, student["fc"]["w"], adapters["fc"], acfg)
+    d = (t_log - s_log).astype(jnp.float32)
+    loss += jnp.mean(d * d)
+    return loss
+
+
+def feature_calibrate(
+    teacher: Dict,
+    student: Dict,
+    adapters: Dict,
+    images: jax.Array,
+    cfg: ResnetConfig,
+    *,
+    epochs: int = 20,
+    batch: int = 1,
+    lr: float = 2e-3,
+) -> Tuple[Dict, list]:
+    """Paper setting: batch 1 over the calibration set, 20 epochs."""
+    opt = AdamW(lr=lr)
+    opt_state = adamw_init(adapters)
+
+    @jax.jit
+    def step(ad, opt_state, x):
+        loss, grads = jax.value_and_grad(
+            lambda a: calibration_loss_resnet(teacher, student, a, x, cfg)
+        )(ad)
+        ad, opt_state = adamw_update(grads, opt_state, ad, opt)
+        return ad, opt_state, loss
+
+    n = images.shape[0]
+    bs = min(batch, n) if batch else n
+    losses = []
+    for e in range(epochs):
+        total = 0.0
+        for i in range(0, n, bs):
+            adapters, opt_state, loss = step(adapters, opt_state, images[i : i + bs])
+            total += float(loss)
+        losses.append(total / max(1, n // bs))
+    return adapters, losses
+
+
+# ---------------------------------------------------------------------------
+# backpropagation baseline (§II-B: full fine-tune with CE on the output)
+# ---------------------------------------------------------------------------
+
+
+def backprop_calibrate(
+    student: Dict,
+    images: jax.Array,
+    labels: jax.Array,
+    cfg: ResnetConfig,
+    *,
+    epochs: int = 20,
+    batch: int = 1,
+    lr: float = 1e-4,
+) -> Tuple[Dict, int]:
+    """Traditional retraining: ALL weights update (every step would be an
+    RRAM write-and-verify pass in the field). Returns (params, n_rram_updates)."""
+    opt = AdamW(lr=lr)
+    opt_state = adamw_init(student)
+
+    def loss_fn(params, x, y):
+        logits, _ = resnet.forward(params, x, cfg)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y])
+
+    @jax.jit
+    def step(params, opt_state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        grads = _zero_bn_stat_grads(grads)
+        params, opt_state = adamw_update(grads, opt_state, params, opt)
+        return params, opt_state, loss
+
+    n = images.shape[0]
+    bs = min(batch, n) if batch else n
+    updates = 0
+    for e in range(epochs):
+        for i in range(0, n, bs):
+            student, opt_state, _ = step(
+                student, opt_state, images[i : i + bs], labels[i : i + bs]
+            )
+            updates += 1
+    return student, updates
+
+
+# ---------------------------------------------------------------------------
+# one full experiment cell
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ReproResult:
+    teacher_acc: float
+    drifted_acc: float
+    calibrated_acc: float
+    method: str
+    samples: int
+    rank: int
+    drift: float
+    trainable_fraction: float
+
+
+def run_cell(
+    *,
+    seed: int = 0,
+    cfg: Optional[ResnetConfig] = None,
+    method: str = "dora",  # 'dora' | 'lora' | 'backprop'
+    rank: int = 2,
+    drift: float = 0.20,
+    samples: int = 10,
+    calib_epochs: int = 20,
+    teacher: Optional[Dict] = None,
+    data=None,
+) -> ReproResult:
+    cfg = cfg or ResnetConfig()
+    if method in ("dora", "lora"):
+        cfg = dataclasses.replace(
+            cfg, adapter=AdapterConfig(rank=rank, kind=method)
+        )
+    key = jax.random.PRNGKey(seed)
+    k_data, k_teacher, k_drift, k_ad, k_pick = jax.random.split(key, 5)
+    if data is None:
+        train_x, train_y = resnet.procedural_dataset(k_data, 2048, cfg)
+        test_x, test_y = resnet.procedural_dataset(
+            jax.random.fold_in(k_data, 7), 1024, cfg
+        )
+    else:
+        train_x, train_y, test_x, test_y = data
+    if teacher is None:
+        teacher = train_teacher(k_teacher, cfg, train_x, train_y)
+    teacher_acc = resnet.accuracy(teacher, test_x, test_y, cfg)
+    student = make_student(teacher, drift, k_drift)
+    drifted_acc = resnet.accuracy(student, test_x, test_y, cfg)
+
+    pick = jax.random.permutation(k_pick, train_x.shape[0])[:samples]
+    cal_x, cal_y = train_x[pick], train_y[pick]
+
+    n_total = sum(
+        x.size for x in jax.tree_util.tree_leaves(teacher)
+    )
+    if method == "backprop":
+        student2, _ = backprop_calibrate(
+            student, cal_x, cal_y, cfg, epochs=calib_epochs
+        )
+        acc = resnet.accuracy(student2, test_x, test_y, cfg)
+        frac = 1.0
+    else:
+        adapters = resnet.init_adapters(k_ad, student, cfg)
+        adapters, _ = feature_calibrate(
+            teacher, student, adapters, cal_x, cfg, epochs=calib_epochs
+        )
+        acc = resnet.accuracy(student, test_x, test_y, cfg, adapters=adapters)
+        n_ad = sum(x.size for x in jax.tree_util.tree_leaves(adapters))
+        frac = n_ad / n_total
+    return ReproResult(
+        teacher_acc=teacher_acc,
+        drifted_acc=drifted_acc,
+        calibrated_acc=acc,
+        method=method,
+        samples=samples,
+        rank=rank,
+        drift=drift,
+        trainable_fraction=frac,
+    )

@@ -1,0 +1,267 @@
+"""ResNet-CIFAR family for the paper-faithful reproduction (§IV).
+
+The paper evaluates on ResNet-20/CIFAR-100 and ResNet-50/ImageNet-1K.
+Neither dataset nor pretrained weights are available offline, so the
+reproduction (EXPERIMENTS.md §Repro) trains the same ResNet-20 topology
+from scratch as the "GPU teacher" on a procedurally generated image
+classification task, then runs the paper's full protocol: drift
+injection -> accuracy drop -> feature-based DoRA calibration vs LoRA vs
+backprop, sweeping calibration-set size and rank r.
+
+Architecture: standard CIFAR ResNet (He et al.): conv3x3(16) ->
+3 stages x n blocks (16/32/64, stride 2 between stages) -> avgpool -> fc.
+depth = 6n+2 (n=3 -> ResNet-20). BatchNorm runs in inference mode with
+teacher statistics during calibration — the paper's "no BN updates"
+property holds by construction (§III-B).
+
+Every conv/fc weight is RRAM-resident (leaf name "w" — picked up by
+core/calibrate.program_model); DoRA/LoRA side-cars attach per layer via
+core/dora conv adapters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dora
+from repro.core.dora import AdapterConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ResnetConfig:
+    depth: int = 20  # 6n+2
+    width: int = 16
+    classes: int = 100
+    image_size: int = 32
+    adapter: AdapterConfig = AdapterConfig(rank=2, kind="dora")
+
+    @property
+    def n_blocks(self) -> int:
+        assert (self.depth - 2) % 6 == 0
+        return (self.depth - 2) // 6
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def block_stride(cfg: ResnetConfig, block_idx: int) -> int:
+    """Stride is STRUCTURE, not a parameter: 2 at each stage boundary
+    (except the first stage), 1 otherwise."""
+    stage, b = divmod(block_idx, cfg.n_blocks)
+    return 2 if (stage > 0 and b == 0) else 1
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / fan_in)
+    return {"w": w.astype(jnp.float32)}
+
+
+def _bn_init(c):
+    return {
+        "scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+        "mean": jnp.zeros((c,)), "var": jnp.ones((c,)),
+    }
+
+
+def init_resnet(key: jax.Array, cfg: ResnetConfig) -> Dict:
+    keys = iter(jax.random.split(key, 200))
+    base: Dict = {"stem": _conv_init(next(keys), 3, 3, 3, cfg.width)}
+    base["stem_bn"] = _bn_init(cfg.width)
+    widths = [cfg.width, cfg.width * 2, cfg.width * 4]
+    blocks = []
+    cin = cfg.width
+    for stage, cout in enumerate(widths):
+        for b in range(cfg.n_blocks):
+            stride = block_stride(cfg, stage * cfg.n_blocks + b)
+            blk = {
+                "conv1": _conv_init(next(keys), 3, 3, cin, cout),
+                "bn1": _bn_init(cout),
+                "conv2": _conv_init(next(keys), 3, 3, cout, cout),
+                "bn2": _bn_init(cout),
+            }
+            if stride != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+                blk["proj_bn"] = _bn_init(cout)
+            blocks.append(blk)
+            cin = cout
+    base["blocks"] = blocks
+    kfc = next(keys)
+    base["fc"] = {
+        "w": (jax.random.normal(kfc, (cin, cfg.classes))
+              * (cin ** -0.5)).astype(jnp.float32)
+    }
+    return base
+
+
+def init_adapters(key: jax.Array, base: Dict, cfg: ResnetConfig) -> Dict:
+    """DoRA/LoRA side-cars mirroring every conv/fc weight."""
+    acfg = cfg.adapter
+    keys = iter(jax.random.split(key, 200))
+
+    def conv_ad(w):
+        kh, kw, cin, cout = w.shape
+        return dora.init_conv_adapter(next(keys), kh, kw, cin, cout, acfg, w)
+
+    ad: Dict = {"stem": conv_ad(base["stem"]["w"]), "blocks": []}
+    for blk in base["blocks"]:
+        abk = {
+            "conv1": conv_ad(blk["conv1"]["w"]),
+            "conv2": conv_ad(blk["conv2"]["w"]),
+        }
+        if "proj" in blk:
+            abk["proj"] = conv_ad(blk["proj"]["w"])
+        ad["blocks"].append(abk)
+    d, c = base["fc"]["w"].shape
+    ad["fc"] = dora.init_adapter(next(keys), d, c, acfg, w_base=base["fc"]["w"])
+    return ad
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _bn(x, p, training: bool, momentum=0.9):
+    if training:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_stats = (
+            momentum * p["mean"] + (1 - momentum) * mean,
+            momentum * p["var"] + (1 - momentum) * var,
+        )
+    else:
+        mean, var = p["mean"], p["var"]
+        new_stats = (p["mean"], p["var"])
+    y = (x - mean) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y, new_stats
+
+
+def _conv(x, base, adapter, acfg, stride=1):
+    if adapter:
+        return dora.adapted_conv_forward(
+            x, base["w"], adapter, acfg, stride=(stride, stride)
+        )
+    dn = jax.lax.conv_dimension_numbers(
+        x.shape, base["w"].shape, ("NHWC", "HWIO", "NHWC")
+    )
+    return jax.lax.conv_general_dilated(
+        x, base["w"].astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=dn,
+    )
+
+
+def forward(
+    base: Dict,
+    images: jax.Array,  # (B, H, W, 3)
+    cfg: ResnetConfig,
+    *,
+    adapters: Optional[Dict] = None,
+    training_bn: bool = False,
+    collect_features: bool = False,
+) -> Tuple[jax.Array, Dict]:
+    """Returns (logits, aux). aux = {"features": [...]} when collecting
+    (one entry per conv output — the feature maps the paper aligns),
+    and updated BN stats when training_bn."""
+    acfg = cfg.adapter
+    ad = adapters or {}
+    feats: List[jax.Array] = []
+    new_bn: Dict = {}
+
+    h = _conv(images, base["stem"], ad.get("stem"), acfg)
+    if collect_features:
+        feats.append(h)
+    h, new_bn["stem_bn"] = _bn(h, base["stem_bn"], training_bn)
+    h = jax.nn.relu(h)
+    new_bn["blocks"] = []
+    for i, blk in enumerate(base["blocks"]):
+        abk = ad["blocks"][i] if ad else {}
+        stride = block_stride(cfg, i)
+        y = _conv(h, blk["conv1"], abk.get("conv1"), acfg, stride)
+        if collect_features:
+            feats.append(y)
+        y, s1 = _bn(y, blk["bn1"], training_bn)
+        y = jax.nn.relu(y)
+        y = _conv(y, blk["conv2"], abk.get("conv2"), acfg)
+        if collect_features:
+            feats.append(y)
+        y, s2 = _bn(y, blk["bn2"], training_bn)
+        sc = h
+        stats = {"bn1": s1, "bn2": s2}
+        if "proj" in blk:
+            sc = _conv(h, blk["proj"], abk.get("proj"), acfg, stride)
+            sc, sp = _bn(sc, blk["proj_bn"], training_bn)
+            stats["proj_bn"] = sp
+        h = jax.nn.relu(y + sc)
+        new_bn["blocks"].append(stats)
+    h = jnp.mean(h, axis=(1, 2))
+    if ad.get("fc"):
+        logits = dora.adapted_forward(h, base["fc"]["w"], ad["fc"], acfg)
+    else:
+        logits = h @ base["fc"]["w"]
+    if collect_features:
+        feats.append(logits)
+    return logits, {"features": feats, "bn_stats": new_bn}
+
+
+def apply_bn_stats(base: Dict, bn_stats: Dict, momentum=0.9) -> Dict:
+    """Fold freshly computed batch statistics back into the params."""
+    import copy
+    out = copy.deepcopy(jax.tree_util.tree_map(lambda x: x, base))
+    m, v = bn_stats["stem_bn"]
+    out["stem_bn"]["mean"], out["stem_bn"]["var"] = m, v
+    for i, stats in enumerate(bn_stats["blocks"]):
+        for name, (mm, vv) in stats.items():
+            out["blocks"][i][name]["mean"] = mm
+            out["blocks"][i][name]["var"] = vv
+    return out
+
+
+# ---------------------------------------------------------------------------
+# procedural dataset (offline stand-in for CIFAR; see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def procedural_dataset(
+    key: jax.Array, n: int, cfg: ResnetConfig, noise: float = 0.35,
+    template_key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Class = fixed random 8x8 low-res template upsampled to image_size;
+    sample = template + jitter shift + Gaussian noise. Learnable by a
+    small CNN yet non-trivial at the chosen noise level.
+
+    Class TEMPLATES come from ``template_key`` (fixed default) so separate
+    train/test draws share the same classes — only noise/shift/labels are
+    resampled from ``key``."""
+    k_t = template_key if template_key is not None else jax.random.PRNGKey(1234)
+    k_y, k_n, k_s = jax.random.split(key, 3)
+    temps = jax.random.normal(k_t, (cfg.classes, 8, 8, 3))
+    temps = jax.image.resize(
+        temps, (cfg.classes, cfg.image_size, cfg.image_size, 3), "nearest"
+    )
+    labels = jax.random.randint(k_y, (n,), 0, cfg.classes)
+    imgs = temps[labels]
+    shifts = jax.random.randint(k_s, (n, 2), -2, 3)
+
+    def roll(img, s):
+        return jnp.roll(img, (s[0], s[1]), axis=(0, 1))
+
+    imgs = jax.vmap(roll)(imgs, shifts)
+    imgs = imgs + noise * jax.random.normal(k_n, imgs.shape)
+    return imgs.astype(jnp.float32), labels
+
+
+def accuracy(base, images, labels, cfg, *, adapters=None, batch=256) -> float:
+    hits = 0
+    for i in range(0, images.shape[0], batch):
+        logits, _ = forward(
+            base, images[i : i + batch], cfg, adapters=adapters
+        )
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == labels[i : i + batch]))
+    return hits / images.shape[0]

@@ -1,0 +1,283 @@
+"""RRAM crossbar compact model: conductance mapping, programming, drift.
+
+Implements Section II of the paper:
+
+  * weights are linearly scaled onto the device conductance range ``G_max``
+    and programmed as a *differential pair* ``(G+, G-)`` of devices
+    (eq. 2):   ``W_r = (G+ - G-) * W_max / G_max``
+  * conductance relaxation drift is Gaussian (eq. 1):
+    ``G_r = G_t + G_drift``,  ``G_drift ~ N(mu, sigma^2)`` with
+    ``relative_drift = sigma / G_max`` (paper Fig. 2 uses sigma/G*).
+
+On TPU the "crossbar" is a frozen int8 tensor pair in HBM; programming and
+drift are *simulated* once per deployment (a "programming event") with a
+deterministic PRNG key, then the codes are static — calibration never
+rewrites them (the paper's whole point).
+
+All functions are pure jnp and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RramConfig:
+    """Device/array parameters for the simulated RRAM crossbar."""
+
+    # Conductance quantization levels per device. 8-bit programming DACs
+    # are typical for analog RRAM macros; codes are [0, levels-1].
+    levels: int = 256
+    # Relative drift sigma / G_max (paper: <= 20% of G_t; Fig. 2 sweeps
+    # 0.05..0.20). 0.0 disables drift (ideal array).
+    relative_drift: float = 0.0
+    # Mean drift (paper assumes mu ~ 0 after stabilization).
+    drift_mu: float = 0.0
+    # Programming (write-and-verify) residual error, relative to G_max.
+    # Separate knob from relaxation drift; default 0 (perfect verify).
+    programming_sigma: float = 0.0
+    # ADC bit-width for the column readout. MVM partial sums saturate at
+    # +-(2**(adc_bits-1)-1) ADC steps when simulate_adc is on.
+    adc_bits: int = 8
+    # Rows simultaneously activated per crossbar MVM (array height).
+    array_rows: int = 256
+    # Whether the MVM simulation applies ADC quantization (slower, used by
+    # the Pallas crossbar kernel & fidelity tests; the LM-scale models use
+    # the dequantized fast path which is numerically equivalent w/o ADC).
+    simulate_adc: bool = False
+
+    @property
+    def code_max(self) -> int:
+        return self.levels - 1
+
+
+# Default config used by the LM stacks: pure drift model, no ADC.
+DEFAULT_RRAM = RramConfig()
+
+
+# ---------------------------------------------------------------------------
+# Programming: float weights -> differential int8 conductance codes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CrossbarWeight:
+    """A weight tensor as programmed onto RRAM.
+
+    ``g_pos``/``g_neg`` are uint8 conductance codes (0..levels-1) holding the
+    positive/negative halves of the differential pair. ``scale`` converts the
+    code difference back to weight units: ``W = (g_pos - g_neg) * scale``.
+    ``scale`` is per-output-channel (last axis), matching per-column
+    programming in real macros.
+    """
+
+    g_pos: jax.Array  # uint8, same shape as the logical weight
+    g_neg: jax.Array  # uint8
+    scale: jax.Array  # f32, shape (..., 1, k) broadcastable over rows
+
+    def tree_flatten(self):
+        return (self.g_pos, self.g_neg, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    CrossbarWeight, CrossbarWeight.tree_flatten, CrossbarWeight.tree_unflatten
+)
+
+
+def program(
+    w: jax.Array,
+    cfg: RramConfig = DEFAULT_RRAM,
+    *,
+    key: Optional[jax.Array] = None,
+) -> CrossbarWeight:
+    """Program float weights onto the simulated crossbar.
+
+    Positive weights map to G+ (G- = 0) and negative weights to G-
+    (G+ = 0) — the standard differential encoding. Per-column scaling uses
+    the column absmax so each column exercises the full conductance range
+    (real macros program column-wise with a shared DAC reference).
+
+    If ``key`` is given and ``cfg.programming_sigma > 0``, write-and-verify
+    residual noise is added to the codes before rounding.
+    """
+    w = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    absmax = jnp.maximum(absmax, 1e-8)
+    scale = absmax / cfg.code_max  # weight units per conductance code
+    codes = w / scale  # signed, in [-code_max, code_max]
+    g_pos = jnp.clip(codes, 0, cfg.code_max)
+    g_neg = jnp.clip(-codes, 0, cfg.code_max)
+    if key is not None and cfg.programming_sigma > 0.0:
+        kp, kn = jax.random.split(key)
+        sp = cfg.programming_sigma * cfg.code_max
+        g_pos = g_pos + sp * jax.random.normal(kp, g_pos.shape)
+        g_neg = g_neg + sp * jax.random.normal(kn, g_neg.shape)
+    g_pos = jnp.clip(jnp.round(g_pos), 0, cfg.code_max).astype(jnp.uint8)
+    g_neg = jnp.clip(jnp.round(g_neg), 0, cfg.code_max).astype(jnp.uint8)
+    return CrossbarWeight(g_pos=g_pos, g_neg=g_neg, scale=scale)
+
+
+def apply_drift(
+    xw: CrossbarWeight,
+    cfg: RramConfig,
+    key: jax.Array,
+) -> CrossbarWeight:
+    """Apply Gaussian conductance relaxation drift (eq. 1) to programmed codes.
+
+    Drift acts on *conductances* (each device of the pair independently),
+    sigma expressed relative to G_max (= code_max in code units). Codes are
+    clipped to the physical range; devices at G=0 can only drift upward
+    (a formed device cannot have negative conductance).
+
+    The result is quantized back to the code grid only for storage
+    compactness; fidelity tests confirm the quantization error is << sigma.
+    """
+    if cfg.relative_drift <= 0.0:
+        return xw
+    kp, kn = jax.random.split(key)
+    # Drift scales with each cell's programmed conductance: the paper
+    # bounds |G_drift| by a FRACTION OF G_t ("generally less than 20% of
+    # G_t", §II-A), i.e. G_r = G_t * (1 + N(mu, sigma_rel^2)). Unformed
+    # cells (G=0) hold no filament state and stay at 0.
+    gp = xw.g_pos.astype(jnp.float32)
+    gn = xw.g_neg.astype(jnp.float32)
+    drift_p = gp * (
+        cfg.drift_mu + cfg.relative_drift * jax.random.normal(kp, gp.shape)
+    )
+    drift_n = gn * (
+        cfg.drift_mu + cfg.relative_drift * jax.random.normal(kn, gn.shape)
+    )
+    g_pos = jnp.clip(gp + drift_p, 0, cfg.code_max)
+    g_neg = jnp.clip(gn + drift_n, 0, cfg.code_max)
+    return CrossbarWeight(
+        g_pos=jnp.round(g_pos).astype(jnp.uint8),
+        g_neg=jnp.round(g_neg).astype(jnp.uint8),
+        scale=xw.scale,
+    )
+
+
+def dequantize(xw: CrossbarWeight, dtype=jnp.float32) -> jax.Array:
+    """Read the effective weight matrix back out of the crossbar codes."""
+    diff = xw.g_pos.astype(jnp.float32) - xw.g_neg.astype(jnp.float32)
+    return (diff * xw.scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fast functional drift path used by the LM stacks
+# ---------------------------------------------------------------------------
+#
+# Programming + drifting every multi-billion-parameter tensor through uint8
+# round-trips is exact but doubles storage during setup. The LM stacks use
+# this fused path: W_r = dequantize(drift(program(W))) computed in one shot,
+# storing only the drifted float (bf16) result. Equivalence with the
+# explicit path is covered by tests/test_rram.py.
+
+
+def drifted_weights(
+    w: jax.Array,
+    cfg: RramConfig,
+    key: jax.Array,
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    """W -> program -> drift -> dequantize, fused; returns drifted weights."""
+    xw = program(w, cfg)
+    xw = apply_drift(xw, cfg, key)
+    return dequantize(xw, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference crossbar MVM with ADC (oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def mvm_reference(
+    x: jax.Array,
+    xw: CrossbarWeight,
+    cfg: RramConfig,
+) -> jax.Array:
+    """Simulated analog MVM: row-blocked accumulation with ADC saturation.
+
+    The array activates ``cfg.array_rows`` rows at a time; each block's
+    differential column current is digitized by an ADC with ``adc_bits``
+    (saturating), then blocks are accumulated digitally. Without ADC
+    simulation this reduces to ``x @ dequantize(xw)``.
+    """
+    if not cfg.simulate_adc:
+        return x @ dequantize(xw)
+    d = x.shape[-1]
+    rows = cfg.array_rows
+    n_blocks = (d + rows - 1) // rows
+    pad = n_blocks * rows - d
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    gp = jnp.pad(xw.g_pos.astype(jnp.float32), [(0, pad), (0, 0)])
+    gn = jnp.pad(xw.g_neg.astype(jnp.float32), [(0, pad), (0, 0)])
+    # Per-block input absmax sets the DAC range; ADC full-scale covers the
+    # worst-case column current of a block.
+    adc_max = 2.0 ** (cfg.adc_bits - 1) - 1.0
+    out = jnp.zeros(x.shape[:-1] + (xw.g_pos.shape[-1],), jnp.float32)
+    for b in range(n_blocks):
+        xs = xp[..., b * rows : (b + 1) * rows]
+        gps = gp[b * rows : (b + 1) * rows]
+        gns = gn[b * rows : (b + 1) * rows]
+        cur = xs @ (gps - gns)  # differential column current
+        # ADC step: full scale = rows * code_max * x_absmax / adc_max
+        x_absmax = jnp.maximum(jnp.max(jnp.abs(xs)), 1e-8)
+        step = rows * cfg.code_max * x_absmax / (adc_max * 16.0)
+        cur = jnp.clip(jnp.round(cur / step), -adc_max, adc_max) * step
+        out = out + cur
+    return out * xw.scale.reshape((1,) * (out.ndim - 1) + (-1,))
+
+
+# ---------------------------------------------------------------------------
+# Lifespan / speed analytical model (paper Table I)
+# ---------------------------------------------------------------------------
+
+RRAM_ENDURANCE = 1e8  # write cycles
+SRAM_ENDURANCE = 1e16
+RRAM_WRITE_NS = 100.0  # write-and-verify per cell
+SRAM_WRITE_NS = 1.0  # ~100x faster than RRAM
+
+
+def lifespan_calibrations(
+    *,
+    samples: int,
+    epochs: int = 20,
+    batch: int = 1,
+    on_rram: bool,
+) -> float:
+    """How many calibrations before the storage wears out (Table I).
+
+    Backprop-on-RRAM updates the array once per optimizer step:
+    ``epochs * samples / batch`` writes per calibration against 1e8
+    endurance. DoRA updates SRAM instead (1e16 endurance).
+    """
+    updates = epochs * (samples / batch)
+    endurance = RRAM_ENDURANCE if on_rram else SRAM_ENDURANCE
+    return endurance / updates
+
+
+def calibration_speedup(
+    *,
+    base_samples: int = 125,
+    dora_samples: int = 10,
+    rram_write_ns: float = RRAM_WRITE_NS,
+    sram_write_ns: float = SRAM_WRITE_NS,
+) -> float:
+    """Weight-update-bound speedup of DoRA/SRAM calibration vs backprop/RRAM.
+
+    Paper §IV-E: update count scales with dataset fraction (10/125 = 8%)
+    and each update is ~100x faster on SRAM -> 1250x.
+    """
+    update_ratio = base_samples / dora_samples
+    write_ratio = rram_write_ns / sram_write_ns
+    return update_ratio * write_ratio

@@ -1,0 +1,89 @@
+"""Deterministic, stateless calibration-data pipeline.
+
+Calibration needs only ~10 samples (the paper's headline), but at
+framework scale the pipeline must still be: deterministic (step -> batch,
+no loader state to checkpoint), shardable (each data-parallel host
+materializes only its slice), and restartable (recovery resumes from the
+step counter alone — see runtime/fault.py).
+
+``step -> batch`` is a pure function of (seed, step), implemented with
+counter-based threefry keys, so elastic re-scaling to a different dp size
+replays the exact same global batch split differently — no data loss or
+duplication on failover.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # calibration set size: batches cycle over this many distinct samples
+    # (paper: 10). 0 -> unlimited fresh stream.
+    n_calibration_samples: int = 10
+    # enc-dec / vlm stubs
+    enc_src_len: int = 0
+    d_model: int = 0
+    vision_tokens: int = 0
+
+
+def _sample_key(cfg: DataConfig, sample_idx: jax.Array) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed), sample_idx)
+
+
+def global_batch_at_step(cfg: DataConfig, step: int) -> Dict[str, np.ndarray]:
+    """Materialize the full global batch (host-side, numpy) for ``step``."""
+    return _slice_batch(cfg, step, 0, cfg.global_batch)
+
+
+def shard_batch_at_step(
+    cfg: DataConfig, step: int, shard: int, n_shards: int
+) -> Dict[str, np.ndarray]:
+    """Materialize only this host's slice of the global batch."""
+    per = cfg.global_batch // n_shards
+    return _slice_batch(cfg, step, shard * per, per)
+
+
+def _slice_batch(cfg: DataConfig, step: int, start: int, count: int):
+    rows = np.arange(start, start + count)
+    sample_ids = (step * cfg.global_batch + rows) % max(
+        cfg.n_calibration_samples or (1 << 31), 1
+    )
+    keys = jax.vmap(lambda i: _sample_key(cfg, i))(jnp.asarray(sample_ids))
+    tokens = jax.vmap(
+        lambda k: jax.random.randint(k, (cfg.seq_len,), 0, cfg.vocab)
+    )(keys)
+    out = {"tokens": np.asarray(tokens, np.int32)}
+    if cfg.enc_src_len and cfg.d_model:
+        embeds = jax.vmap(
+            lambda k: jax.random.normal(
+                jax.random.fold_in(k, 1), (cfg.enc_src_len, cfg.d_model)
+            )
+        )(keys)
+        out["enc_embeds"] = np.asarray(embeds, np.float32).astype(np.float32)
+    if cfg.vision_tokens and cfg.d_model:
+        patches = jax.vmap(
+            lambda k: jax.random.normal(
+                jax.random.fold_in(k, 2), (cfg.vision_tokens, cfg.d_model)
+            )
+        )(keys)
+        out["patch_embeds"] = np.asarray(patches, np.float32)
+    return out
+
+
+def batches(cfg: DataConfig, start_step: int = 0):
+    """Infinite deterministic iterator (resume by passing the restored
+    step counter)."""
+    step = start_step
+    while True:
+        yield step, global_batch_at_step(cfg, step)
+        step += 1

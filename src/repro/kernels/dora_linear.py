@@ -1,0 +1,108 @@
+"""Fused RIMC-DoRA linear kernel (Pallas TPU).
+
+Computes, in one pass over the crossbar codes (paper eq. 2 + eq. 6):
+
+    Y = (X @ W_r + (X @ A) @ B) * gamma
+    W_r = (G+ - G-) * scale          (differential int8 conductance pair)
+    gamma = M / ||W_r + A@B||_col    (DoRA magnitude / merged column norm)
+
+TPU mapping (DESIGN.md §2):
+  * grid (M/bm, N/bn, K/bk); K innermost so the f32 accumulators live in
+    VMEM scratch across the K loop (MXU-aligned tiles, bm/bn/bk multiples
+    of 128 at full size).
+  * the int8->bf16 dequant of (G+ - G-) happens in-register per tile —
+    HBM traffic is 2 bytes/weight of codes instead of 2 bytes of bf16
+    PLUS it never materializes W_r in HBM (the RRAM array is read-only).
+  * the low-rank path rides the same K loop: per K-tile we accumulate
+    XA (bm, r) — r is tiny (4..64), so the extra VMEM is negligible; at
+    the last K step the epilogue applies (XA)@B and the DoRA scale.
+
+``gamma`` is precomputed at load time (Algorithm 2 line 12 merge) by
+``ops.dora_gamma`` — the kernel itself is inference/serving-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, gp_ref, gn_ref, scale_ref, a_ref, b_ref, gamma_ref,
+            o_ref, acc_ref, xa_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    # in-register differential dequant: int8 codes -> f32 weights
+    w = (gp_ref[...].astype(jnp.float32) - gn_ref[...].astype(jnp.float32))
+    acc_ref[...] += jax.lax.dot(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+    xa_ref[...] += jax.lax.dot(
+        x.astype(jnp.float32), a_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        scale = scale_ref[...]  # (1, bn) per-column code scale
+        lowrank = jax.lax.dot(
+            xa_ref[...], b_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        y = acc_ref[...] * scale + lowrank
+        o_ref[...] = (y * gamma_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def dora_linear(
+    x: jax.Array,       # (M, K)
+    g_pos: jax.Array,   # (K, N) uint8
+    g_neg: jax.Array,   # (K, N) uint8
+    scale: jax.Array,   # (1, N) f32 — code->weight scale per column
+    a: jax.Array,       # (K, r)
+    b: jax.Array,       # (r, N)
+    gamma: jax.Array,   # (1, N) f32 — merged DoRA magnitude M/||.||
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+):
+    m, k = x.shape
+    _, n = g_pos.shape
+    r = a.shape[1]
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # g_pos
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # g_neg
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # scale
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),    # a
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),     # b
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # gamma
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),  # main accumulator
+            pltpu.VMEM((bm, r), jnp.float32),   # low-rank XA accumulator
+        ],
+        interpret=interpret,
+    )(x, g_pos, g_neg, scale, a, b, gamma)

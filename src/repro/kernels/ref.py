@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dora_linear_ref(x, g_pos, g_neg, scale, a, b, gamma, out_dtype=jnp.float32):
+    """Y = (X @ ((G+-G-)*scale) + (X@A)@B) * gamma, all in f32."""
+    xf = x.astype(jnp.float32)
+    w = (g_pos.astype(jnp.float32) - g_neg.astype(jnp.float32)) * scale
+    y = xf @ w
+    y = y + (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    return (y * gamma).astype(out_dtype)
+
+
+def crossbar_mvm_ref(
+    x, g_pos, g_neg, scale, *, code_max=255, adc_bits=8, bm=128, rows=256,
+    out_dtype=jnp.float32,
+):
+    """Tile-accurate oracle for kernels/crossbar_mvm.py: same (bm x rows)
+    tiling, per-tile DAC reference and saturating ADC."""
+    m, k = x.shape
+    n = g_pos.shape[1]
+    assert m % bm == 0 and k % rows == 0
+    adc_max = 2.0 ** (adc_bits - 1) - 1.0
+    out = jnp.zeros((m, n), jnp.float32)
+    for i in range(m // bm):
+        acc = jnp.zeros((bm, n), jnp.float32)
+        xs_m = x[i * bm : (i + 1) * bm].astype(jnp.float32)
+        for kk in range(k // rows):
+            xs = xs_m[:, kk * rows : (kk + 1) * rows]
+            gp = g_pos[kk * rows : (kk + 1) * rows].astype(jnp.float32)
+            gn = g_neg[kk * rows : (kk + 1) * rows].astype(jnp.float32)
+            cur = xs @ (gp - gn)
+            x_absmax = jnp.maximum(jnp.max(jnp.abs(xs)), 1e-8)
+            step = rows * code_max * x_absmax / (adc_max * 16.0)
+            cur = jnp.clip(jnp.round(cur / step), -adc_max, adc_max) * step
+            acc = acc + cur
+        out = out.at[i * bm : (i + 1) * bm].set(acc)
+    return (out * scale).astype(out_dtype)
+
+
+def selective_scan_ref(x, dt, a_log, b_sel, c_sel, d_skip, h0=None):
+    """Sequential (step-by-step) selective-scan oracle in f64-ish f32.
+    Shapes: x/dt (B,S,D), a_log (D,N), b_sel/c_sel (B,S,N)."""
+    bsz, s, d = x.shape
+    n = a_log.shape[-1]
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))
+    h = jnp.zeros((bsz, d, n), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(s):
+        dt_t = dt[:, t].astype(jnp.float32)
+        x_t = x[:, t].astype(jnp.float32)
+        a_t = jnp.exp(dt_t[..., None] * neg_a[None])
+        b_t = (dt_t * x_t)[..., None] * b_sel[:, t, None, :].astype(jnp.float32)
+        h = a_t * h + b_t
+        y = jnp.einsum("bdn,bn->bd", h, c_sel[:, t].astype(jnp.float32))
+        ys.append(y + x_t * d_skip[None].astype(jnp.float32))
+    return jnp.stack(ys, axis=1), h

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's
+``xla_force_host_platform_device_count`` trick to work, and for smoke
+tests/benches to keep seeing exactly 1 CPU device.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: one pod = 16x16 = 256 chips, axes
+    ("data", "model"); the multi-pod mesh adds a leading "pod" axis over
+    2 pods = 512 chips (DCN between pods, ICI within)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a production mesh (batch sharding)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh) -> str:
+    return "model"
+
+
+def make_elastic_mesh(n_failed_hosts: int = 0, *, multi_pod: bool = False):
+    """Degraded mesh after losing ``n_failed_hosts`` 16-chip hosts: shrink
+    the data axis (model axis untouched so param sharding is stable) —
+    checkpoint/manager.py reshards state onto this mesh on restart."""
+    rows = (32 if multi_pod else 16) - n_failed_hosts
+    if rows < 1:
+        raise ValueError("no capacity left")
+    return jax.make_mesh((rows, 16), ("data", "model"))

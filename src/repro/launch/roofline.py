@@ -1,0 +1,168 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+TPU v5e hardware constants (per chip):
+  peak bf16 compute 197 TFLOP/s, HBM BW 819 GB/s, ICI ~50 GB/s/link.
+
+Terms (per device; cost_analysis of the SPMD-partitioned module is already
+per-partition):
+  compute_s    = HLO_FLOPs / peak
+  memory_s     = HLO_bytes_accessed / hbm_bw
+  collective_s = collective_bytes / ici_bw
+
+collective_bytes is not in cost_analysis: we parse the post-SPMD HLO and
+sum the *result-shape* bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (a ring-transfer proxy:
+each device sends/receives ~result-size bytes per collective). Collectives
+whose replica groups only span the "pod" axis would ride DCN, not ICI —
+at 2 pods the proxy keeps them on the slower-of-the-two link constant,
+which is conservative.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.1 = bf16[2,4096,128]{2,1,0} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s(" + "|".join(_COLLECTIVES) + r")\("
+)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from post-SPMD HLO text."""
+    totals: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        hit = None
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in stripped and "=" in stripped:
+                hit = kind
+                break
+        if hit is None:
+            continue
+        # result may be a tuple (variadic collectives)
+        lhs = stripped.split("=", 1)[1]
+        head = lhs.split(hit + "(", 1)[0]
+        size = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(head)
+        )
+        totals[hit] += size
+        counts[hit] += 1
+    totals["_counts"] = counts  # type: ignore
+    return totals
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    coll_bytes: float  # per device
+    coll_breakdown: Dict[str, int]
+    peak_memory: Optional[float]  # per device, bytes
+    model_flops: float  # useful 6ND-style flops per device
+    compile_ok: bool = True
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three overlapping terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak: useful model flops / (step_time * peak)."""
+        t = self.step_time_s
+        return self.model_flops / (t * PEAK_FLOPS) if t else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_accessed,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_breakdown": {
+                k: v for k, v in self.coll_breakdown.items() if k != "_counts"
+            },
+            "coll_counts": self.coll_breakdown.get("_counts", {}),
+            "peak_memory_per_dev": self.peak_memory,
+            "model_flops_per_dev": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch:24s} {self.shape:12s} {self.mesh:10s} "
+            f"compute={self.compute_s*1e3:9.3f}ms mem={self.memory_s*1e3:9.3f}ms "
+            f"coll={self.collective_s*1e3:9.3f}ms -> {self.bottleneck:10s} "
+            f"useful={self.useful_flop_ratio:6.1%} roofline={self.roofline_fraction:6.1%}"
+        )
+
+
+def save_rooflines(rows, path):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in rows], f, indent=1)

@@ -1,0 +1,201 @@
+"""Calibration-training driver.
+
+Runs the paper's DoRA feature-calibration as a production training job:
+deterministic data, sharded calib_step under a mesh, periodic async
+checkpoints, preemption-safe shutdown, straggler telemetry, and
+restart/elastic-resume.
+
+CPU-scale usage (CI / this container):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --smoke --steps 20 --batch 4 --seq 64
+
+On a real pod the same driver runs with --mesh single|multi and the full
+config; the step function is identical (it is the one the dry-run lowers).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch
+from repro.core.calibrate import CalibState, make_calib_step, program_model
+from repro.data.pipeline import DataConfig, global_batch_at_step
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.optim.adam import AdamW, adamw_init
+from repro.runtime.fault import PreemptionGuard, StepTimer, StragglerDetector
+from repro.sharding import rules as sh
+
+
+def build_state(cfg, seed: int = 0) -> CalibState:
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    student = program_model(params["base"], cfg.rram, jax.random.PRNGKey(seed + 1))
+    opt_state = adamw_init(params["adapters"])
+    return CalibState(
+        params["base"], student, params["adapters"], opt_state,
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def data_config(cfg, *, batch: int, seq: int, samples: int = 10) -> DataConfig:
+    return DataConfig(
+        vocab=cfg.vocab,
+        seq_len=seq,
+        global_batch=batch,
+        n_calibration_samples=samples,
+        enc_src_len=seq if cfg.encoder_layers else 0,
+        d_model=cfg.d_model if (cfg.encoder_layers or cfg.vision_tokens) else 0,
+        vision_tokens=cfg.vision_tokens,
+    )
+
+
+def train(
+    arch_name: str,
+    *,
+    smoke: bool = False,
+    steps: int = 50,
+    batch: int = 4,
+    seq: int = 64,
+    lr: float = 1e-3,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 20,
+    use_mesh: Optional[str] = None,  # None | 'single' | 'multi'
+    resume: bool = True,
+    seed: int = 0,
+    log_every: int = 10,
+    # Cache teacher features once per distinct calibration batch
+    # (Algorithm 1 line 3; §Perf H-9: -29% FLOPs, -17% bytes per step).
+    cached_teacher: bool = False,
+) -> Dict:
+    arch = get_arch(arch_name)
+    cfg = arch.smoke if smoke else arch.full
+    opt = AdamW(lr=lr)
+    use_cached = (
+        cached_teacher and not cfg.encoder_layers and not cfg.vision_tokens
+    )
+    if use_cached:
+        from repro.core.calibrate import make_cached_calib_step, teacher_features
+        step_fn = make_cached_calib_step(cfg, opt)
+    else:
+        step_fn = make_calib_step(cfg, opt)
+    dcfg = data_config(cfg, batch=batch, seq=seq)
+
+    mesh = None
+    if use_mesh:
+        mesh = mesh_lib.make_production_mesh(multi_pod=use_mesh == "multi")
+        dp, tp = mesh_lib.dp_axes(mesh), mesh_lib.tp_axis(mesh)
+
+    state = build_state(cfg, seed)
+    manager = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    start_step = 0
+    if manager and resume and manager.latest_step() is not None:
+        start_step = manager.latest_step()
+        restored = manager.restore(
+            start_step,
+            {"adapters": state.adapters, "opt": state.opt_state},
+        )
+        state = CalibState(
+            state.teacher_base, state.student_base,
+            restored["adapters"], restored["opt"],
+            jnp.asarray(start_step, jnp.int32),
+        )
+        print(f"resumed from step {start_step}")
+
+    if mesh is not None:
+        ctx = jax.set_mesh(mesh)
+        hint_ctx = sh.logical_axes(dp, tp)
+    else:
+        import contextlib
+        ctx = contextlib.nullcontext()
+        hint_ctx = contextlib.nullcontext()
+
+    # NOTE: no donation — teacher and student share digital-peripheral
+    # buffers (norms/embeddings pass through program_model unchanged), and
+    # XLA rejects donating the same buffer twice.
+    jit_step = jax.jit(step_fn)
+    detector = StragglerDetector()
+    history = []
+    feats_cache = {}
+    with ctx, hint_ctx, PreemptionGuard() as guard:
+        for step in range(start_step, steps):
+            np_batch = global_batch_at_step(dcfg, step)
+            batch_dev = {
+                k: jnp.asarray(
+                    v, jnp.bfloat16 if v.dtype == np.float32 else None
+                )
+                for k, v in np_batch.items()
+            }
+            with StepTimer() as t:
+                if use_cached:
+                    # distinct calibration batches repeat (10-sample set):
+                    # teacher features computed once per batch identity
+                    bkey = step % max(
+                        1, dcfg.n_calibration_samples // dcfg.global_batch
+                    ) if dcfg.n_calibration_samples else step
+                    if bkey not in feats_cache:
+                        feats_cache[bkey] = teacher_features(
+                            state.teacher_base, batch_dev, cfg
+                        )
+                    state, metrics = jit_step(state, feats_cache[bkey], batch_dev)
+                else:
+                    state, metrics = jit_step(state, batch_dev)
+                loss = float(metrics["loss"])
+            detector.record(step, t.elapsed)
+            history.append(loss)
+            if step % log_every == 0:
+                print(f"step {step:5d} loss {loss:.6f} ({t.elapsed*1e3:.0f} ms)")
+            if manager and (step + 1) % ckpt_every == 0:
+                manager.save(
+                    step + 1,
+                    {"adapters": state.adapters, "opt": state.opt_state},
+                    blocking=False,
+                )
+            if guard.should_stop:
+                print("preemption requested: checkpoint + clean exit")
+                if manager:
+                    manager.save(
+                        step + 1,
+                        {"adapters": state.adapters, "opt": state.opt_state},
+                    )
+                break
+    if manager:
+        manager.wait()
+    return {
+        "final_loss": history[-1] if history else None,
+        "history": history,
+        "straggler_reports": detector.reports,
+        "state": state,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = train(
+        args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, use_mesh=args.mesh, seed=args.seed,
+    )
+    print(f"final loss: {out['final_loss']:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Shared layer primitives. Every matmul in the model zoo goes through
+``RimcLinear`` — the paper's unit of calibration: a frozen (possibly
+drifted) base weight that lives "in RRAM", plus an optional DoRA/LoRA
+side-car that lives "in SRAM" (trainable).
+
+Parameter convention
+--------------------
+``init_*`` functions return ``(base, adapters)`` pytrees with *mirrored*
+structure. ``base`` holds frozen weights; ``adapters`` holds the trainable
+DoRA parameters (possibly ``{}`` for layers without adapters, e.g. norms).
+The two trees are kept separate at the top level so the optimizer and the
+drift-programming pass each see exactly one tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dora
+from repro.core.dora import AdapterConfig
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# RimcLinear
+# ---------------------------------------------------------------------------
+
+
+def init_linear(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    acfg: AdapterConfig,
+    *,
+    dtype=jnp.bfloat16,
+    scale: Optional[float] = None,
+) -> Tuple[Dict, Dict]:
+    kw, ka = jax.random.split(key)
+    if scale is None:
+        scale = d_in ** -0.5
+    w = (jax.random.normal(kw, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    adapter = dora.init_adapter(ka, d_in, d_out, acfg, w_base=w)
+    return {"w": w}, adapter
+
+
+def linear(
+    x: jax.Array,
+    base: Dict,
+    adapter: Optional[Dict],
+    acfg: AdapterConfig,
+) -> jax.Array:
+    """Apply a RimcLinear. ``adapter=None`` or ``{}`` -> plain base matmul
+    (teacher path / pure-RRAM student)."""
+    if adapter:
+        return dora.adapted_forward(x, base["w"], adapter, acfg)
+    return x @ base["w"].astype(x.dtype)
+
+
+def init_kernel_linear(*args, **kwargs):  # alias used by kernels/ops tests
+    return init_linear(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Norms (digital peripherals — never in RRAM, never trainable during
+# calibration: the paper's "no BN update" analogue)
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x: jax.Array, p: Dict, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(x: jax.Array, p: Dict, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (digital: gather, not an MVM — crossbars can't index)
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(
+    key: jax.Array, vocab: int, d: int, dtype=jnp.bfloat16
+) -> Dict:
+    w = jax.random.normal(key, (vocab, d), jnp.float32).astype(dtype)
+    return {"embedding": w}
+
+
+def embed(
+    tokens: jax.Array, p: Dict, *, scale_by_sqrt_dim: bool = False,
+    one_hot: bool = False,
+):
+    """Token embedding lookup.
+
+    ``one_hot=True`` computes the lookup as a one-hot matmul: with the
+    table vocab-sharded over the model axis, XLA then emits a tiny
+    (tokens, d) psum instead of all-gathering the whole table (2+ GB for
+    256k-vocab archs). Used by the decode path where tokens-per-step is
+    O(batch) (§Perf H-5); the gather path stays for training (one-hot
+    matmul FLOPs scale with vocab x tokens).
+    """
+    w = p["embedding"]
+    if one_hot:
+        oh = jax.nn.one_hot(tokens, w.shape[0], dtype=w.dtype)
+        y = oh @ w
+    else:
+        y = jnp.take(w, tokens, axis=0)
+    if scale_by_sqrt_dim:
+        y = y * (w.shape[-1] ** 0.5)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated) — two/three RimcLinears
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_model: int
+    d_ff: int
+    gated: bool = True  # SwiGLU-style (llama/gemma/qwen); False -> GeLU MLP
+    activation: str = "silu"  # 'silu' | 'gelu' | 'gelu_tanh' | 'relu'
+
+
+def _act(x: jax.Array, name: str) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=False)
+    if name == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name}")
+
+
+def init_mlp(
+    key: jax.Array, cfg: MlpConfig, acfg: AdapterConfig, dtype=jnp.bfloat16
+) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, 3)
+    base: Dict = {}
+    adapters: Dict = {}
+    if cfg.gated:
+        base["gate"], adapters["gate"] = init_linear(
+            keys[0], cfg.d_model, cfg.d_ff, acfg, dtype=dtype
+        )
+    base["up"], adapters["up"] = init_linear(
+        keys[1], cfg.d_model, cfg.d_ff, acfg, dtype=dtype
+    )
+    base["down"], adapters["down"] = init_linear(
+        keys[2], cfg.d_ff, cfg.d_model, acfg, dtype=dtype
+    )
+    return base, adapters
+
+
+def mlp(
+    x: jax.Array,
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: MlpConfig,
+    acfg: AdapterConfig,
+) -> jax.Array:
+    a = adapters or {}
+    up = linear(x, base["up"], a.get("up"), acfg)
+    if cfg.gated:
+        gate = linear(x, base["gate"], a.get("gate"), acfg)
+        h = _act(gate, cfg.activation) * up
+    else:
+        h = _act(up, cfg.activation)
+    return linear(h, base["down"], a.get("down"), acfg)

@@ -1,0 +1,277 @@
+"""Mixture-of-Experts FFN (mixtral-8x22b, deepseek-v2-lite).
+
+Dispatch strategy (TPU/pjit-native, no torch.distributed emulation):
+tokens are grouped by expert via an argsort permutation into a fixed
+``(n_experts, capacity)`` layout, expert FFNs run as one batched einsum
+``(E, C, d) x (E, d, ff)``, and results scatter-add back weighted by the
+router gates. Expert weights are sharded tensor-parallel over the "model"
+axis along ``d_ff`` (every device holds a slice of every expert), so
+dispatch needs **no all-to-all** — the activation stays data-sharded and
+the expert einsum reduces over the model axis like a dense MLP.
+(Expert-parallel dispatch is an explored hillclimb alternative; see
+EXPERIMENTS.md §Perf.)
+
+The router is itself a RimcLinear — its weights drift in RRAM and receive
+a DoRA side-car like every other projection (routing drift is a real
+failure mode the paper's technique must fix; tests/test_moe.py checks it).
+
+Overflowing tokens beyond capacity are dropped (standard Switch-style);
+with ``capacity_factor >= top_k * n_experts / n_experts`` and uniform
+routing the drop rate is ~0. Dropped tokens fall back to the shared
+experts/residual path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dora
+from repro.core.dora import AdapterConfig
+from repro.models import layers as L
+from repro.sharding.rules import shard_hint
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0  # always-on shared experts (deepseek-v2)
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    # routed scaling (deepseek multiplies routed output)
+    routed_scale: float = 1.0
+
+
+def init_moe(
+    key: jax.Array, cfg: MoeConfig, acfg: AdapterConfig, dtype=jnp.bfloat16
+) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, 5)
+    base: Dict = {}
+    adapters: Dict = {}
+    base["router"], adapters["router"] = L.init_linear(
+        keys[0], cfg.d_model, cfg.n_experts, acfg, dtype=jnp.float32
+    )
+    scale_in = cfg.d_model ** -0.5
+    scale_out = cfg.d_ff ** -0.5
+
+    def expert_stack(k, d_in, d_out, scale):
+        return (
+            jax.random.normal(k, (cfg.n_experts, d_in, d_out), jnp.float32) * scale
+        ).astype(dtype)
+
+    base["gate_w"] = expert_stack(keys[1], cfg.d_model, cfg.d_ff, scale_in)
+    base["up_w"] = expert_stack(keys[2], cfg.d_model, cfg.d_ff, scale_in)
+    base["down_w"] = expert_stack(keys[3], cfg.d_ff, cfg.d_model, scale_out)
+    # Per-expert DoRA side-cars, stacked on the expert axis.
+    ka = jax.random.split(keys[4], 3)
+    adapters["gate_w"] = _stacked_adapter(ka[0], cfg.n_experts, cfg.d_model, cfg.d_ff, acfg, base["gate_w"])
+    adapters["up_w"] = _stacked_adapter(ka[1], cfg.n_experts, cfg.d_model, cfg.d_ff, acfg, base["up_w"])
+    adapters["down_w"] = _stacked_adapter(ka[2], cfg.n_experts, cfg.d_ff, cfg.d_model, acfg, base["down_w"])
+    if cfg.n_shared:
+        kg = jax.random.split(keys[4], cfg.n_shared + 3)[3:]
+        shared_base, shared_ad = [], []
+        mcfg = L.MlpConfig(cfg.d_model, cfg.d_ff * cfg.n_shared, gated=True,
+                           activation=cfg.activation)
+        sb, sa = L.init_mlp(kg[0], mcfg, acfg, dtype=dtype)
+        base["shared"] = sb
+        adapters["shared"] = sa
+    return base, adapters
+
+
+def _stacked_adapter(key, n_experts, d, k, acfg: AdapterConfig, w_stack):
+    if acfg.kind == "none":
+        return {}
+    keys = jax.random.split(key, n_experts)
+    ads = [
+        dora.init_adapter(keys[e], d, k, acfg, w_base=w_stack[e])
+        for e in range(n_experts)
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ads)
+
+
+def _expert_matmul(
+    x: jax.Array,  # (B, E, C, d_in)
+    w: jax.Array,  # (E, d_in, d_out)
+    adapter: Optional[Dict],
+    acfg: AdapterConfig,
+) -> jax.Array:
+    y = jnp.einsum("becd,edf->becf", x, w.astype(x.dtype))
+    if not adapter:
+        return y
+    a = adapter["lora_a"].astype(x.dtype)  # (E, d_in, r)
+    b = adapter["lora_b"].astype(x.dtype)  # (E, r, d_out)
+    y = y + jnp.einsum(
+        "becr,erf->becf", jnp.einsum("becd,edr->becr", x, a), b
+    )
+    if acfg.kind == "dora":
+        if "dora_m_merged" in adapter:
+            scale = adapter["dora_m_merged"].astype(jnp.float32)
+        else:
+            norm = _stacked_column_norm(w, adapter["lora_a"], adapter["lora_b"])
+            scale = adapter["dora_m"].astype(jnp.float32) / norm
+        y = y * scale[None, :, None, :].astype(x.dtype)
+    return y
+
+
+def _stacked_column_norm(w, a, b, eps=1e-6):
+    wf = w.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    w_sq = jnp.sum(wf * wf, axis=1)  # (E, d_out)
+    wta = jnp.einsum("edk,edr->ekr", wf, af)  # (E, d_out, r)
+    cross = jnp.einsum("ekr,erk->ek", wta, bf)
+    ab = jnp.einsum("edr,erk->edk", af, bf)
+    ab_sq = jnp.sum(ab * ab, axis=1)
+    return jnp.sqrt(jnp.maximum(w_sq + 2.0 * cross + ab_sq, eps))
+
+
+def _route_row(
+    xrow: jax.Array,  # (S, d) one batch row's tokens
+    router_logits: jax.Array,  # (S, E)
+    cfg: MoeConfig,
+    capacity: int,
+):
+    """Group ONE batch row's tokens into (E*C,) slots.
+
+    Dispatch granularity is the batch row, so with the batch dim sharded
+    over the data axes the argsort/scatter never crosses shards — the
+    global-argsort variant replicated the full (T, d) token set on every
+    device (5 TB/step of all-gather on deepseek-v2 train_4k; see
+    EXPERIMENTS.md §Perf H-1)."""
+    s = xrow.shape[0]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, cfg.top_k)  # (S, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    flat_expert = expert_idx.reshape(-1)  # (S*k,)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    pos_in_group = jnp.arange(s * cfg.top_k) - jnp.searchsorted(
+        sorted_expert, sorted_expert, side="left"
+    )
+    keep = pos_in_group < capacity
+    slot = jnp.where(
+        keep, sorted_expert * capacity + pos_in_group,
+        cfg.n_experts * capacity,
+    )
+    token_of_entry = order // cfg.top_k
+    slot_token = jnp.full((cfg.n_experts * capacity + 1,), s, jnp.int32)
+    slot_token = slot_token.at[slot].set(token_of_entry.astype(jnp.int32))
+    slot_gate = jnp.zeros((cfg.n_experts * capacity + 1,), jnp.float32)
+    slot_gate = slot_gate.at[slot].set(gates.reshape(-1)[order])
+    return slot_token[:-1], slot_gate[:-1]  # (E*C,), (E*C,)
+
+
+def moe_block(
+    x: jax.Array,  # (B, S, d)
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: MoeConfig,
+    acfg: AdapterConfig,
+) -> jax.Array:
+    a_ = adapters or {}
+    bsz, s, d = x.shape
+    if s == 1:
+        # decode: dense gating — every expert runs on the single token and
+        # results are gate-masked. No dispatch gather/scatter (and so no
+        # dispatch collectives); decode is weight-memory-bound, so the
+        # top_k/E extra FLOPs are below the roofline anyway (§Perf H-3).
+        return _moe_decode_dense(x, base, a_, cfg, acfg)
+    capacity = int(
+        max(1, -(-s * cfg.top_k * cfg.capacity_factor // cfg.n_experts))
+    )
+
+    # --- routing + per-row grouping (data-local; no cross-shard movement) ---
+    logits = L.linear(
+        x.astype(jnp.float32), base["router"], a_.get("router"), acfg
+    )  # (B, S, E)
+    slot_token, slot_gate = jax.vmap(
+        lambda xr, lr: _route_row(xr, lr, cfg, capacity)
+    )(x, logits)  # (B, E*C) each
+
+    x_pad = jnp.concatenate([x, jnp.zeros((bsz, 1, d), x.dtype)], axis=1)
+    xg = jnp.take_along_axis(
+        x_pad, slot_token[..., None].astype(jnp.int32), axis=1
+    ).reshape(bsz, cfg.n_experts, capacity, d)
+    xg = shard_hint(xg, "D", None, None, None)
+
+    # --- expert FFNs ---------------------------------------------------------
+    gate_h = shard_hint(
+        _expert_matmul(xg, base["gate_w"], a_.get("gate_w"), acfg),
+        "D", None, None, "T",
+    )
+    up_h = shard_hint(
+        _expert_matmul(xg, base["up_w"], a_.get("up_w"), acfg),
+        "D", None, None, "T",
+    )
+    h = L._act(gate_h, cfg.activation) * up_h
+    out_g = shard_hint(
+        _expert_matmul(h, base["down_w"], a_.get("down_w"), acfg),
+        "D", None, None, None,
+    )
+
+    # --- combine (per-row scatter-add, data-local) ---------------------------
+    out_flat = out_g.reshape(bsz, cfg.n_experts * capacity, d).astype(jnp.float32)
+    out_flat = out_flat * slot_gate[..., None]
+    combined = jnp.zeros((bsz, s + 1, d), jnp.float32)
+    combined = jax.vmap(lambda c, idx, v: c.at[idx].add(v))(
+        combined, slot_token, out_flat
+    )
+    y = combined[:, :s] * cfg.routed_scale
+
+    # --- shared experts ------------------------------------------------------
+    if cfg.n_shared:
+        mcfg = L.MlpConfig(
+            cfg.d_model, cfg.d_ff * cfg.n_shared, gated=True, activation=cfg.activation
+        )
+        y = y + L.mlp(x, base["shared"], a_.get("shared"), mcfg, acfg).astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype)
+
+
+def _moe_decode_dense(x, base, a_, cfg: MoeConfig, acfg):
+    bsz, s, d = x.shape  # s == 1
+    logits = L.linear(
+        x.astype(jnp.float32), base["router"], a_.get("router"), acfg
+    )[:, 0]  # (B, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, cfg.top_k)  # (B, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # dense per-expert mask: (B, E) combine weights (0 off the top-k)
+    combine = jnp.zeros_like(probs).at[
+        jnp.arange(bsz)[:, None], expert_idx
+    ].set(gates)
+    xe = x[:, None, :, :]  # (B, 1, 1, d) broadcast over experts via einsum
+    xg = jnp.broadcast_to(xe, (bsz, cfg.n_experts, 1, d))
+    gate_h = _expert_matmul(xg, base["gate_w"], a_.get("gate_w"), acfg)
+    up_h = _expert_matmul(xg, base["up_w"], a_.get("up_w"), acfg)
+    h = L._act(gate_h, cfg.activation) * up_h
+    out_g = _expert_matmul(h, base["down_w"], a_.get("down_w"), acfg)
+    # (B, E, 1, d) x (B, E) -> (B, 1, d)
+    y = jnp.einsum(
+        "beld,be->bld", out_g.astype(jnp.float32), combine
+    ) * cfg.routed_scale
+    if cfg.n_shared:
+        mcfg = L.MlpConfig(
+            cfg.d_model, cfg.d_ff * cfg.n_shared, gated=True,
+            activation=cfg.activation,
+        )
+        y = y + L.mlp(x, base["shared"], a_.get("shared"), mcfg, acfg).astype(
+            jnp.float32
+        )
+    return y.astype(x.dtype)
+
+
+def load_balancing_loss(logits: jax.Array, expert_idx: jax.Array, n_experts: int):
+    """Switch-style aux loss (exposed for pre-deployment training; the
+    calibration step never trains the router beyond its DoRA side-car)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = jnp.mean(probs, axis=0)
+    one_hot = jax.nn.one_hot(expert_idx[..., 0], n_experts)
+    usage = jnp.mean(one_hot, axis=0)
+    return n_experts * jnp.sum(density * usage)

@@ -1,0 +1,162 @@
+"""RG-LRU recurrent block (recurrentgemma-9b, Griffin arXiv:2402.19427).
+
+Recurrence (per channel, elementwise state — parallelizable with a single
+associative scan over the whole sequence):
+
+    r_t = sigmoid(W_a x_t)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t)                      (input gate)
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda)   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The full residual block is: linear-in (x, y branches), depthwise causal
+conv on the recurrent branch, RG-LRU, gated merge, linear-out — all dense
+projections RimcLinear (DoRA side-cars apply; DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dora import AdapterConfig
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv
+
+_C_FACTOR = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RglruConfig:
+    d_model: int
+    d_rnn: int  # lru width
+    conv_kernel: int = 4
+
+
+def init_rglru(
+    key: jax.Array, cfg: RglruConfig, acfg: AdapterConfig, dtype=jnp.bfloat16
+) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, 6)
+    base: Dict = {}
+    adapters: Dict = {}
+    base["in_x"], adapters["in_x"] = L.init_linear(
+        keys[0], cfg.d_model, cfg.d_rnn, acfg, dtype=dtype
+    )
+    base["in_y"], adapters["in_y"] = L.init_linear(
+        keys[1], cfg.d_model, cfg.d_rnn, acfg, dtype=dtype
+    )
+    base["gate_a"], adapters["gate_a"] = L.init_linear(
+        keys[2], cfg.d_rnn, cfg.d_rnn, acfg, dtype=dtype
+    )
+    base["gate_x"], adapters["gate_x"] = L.init_linear(
+        keys[3], cfg.d_rnn, cfg.d_rnn, acfg, dtype=dtype
+    )
+    base["out"], adapters["out"] = L.init_linear(
+        keys[4], cfg.d_rnn, cfg.d_model, acfg, dtype=dtype
+    )
+    base["conv_w"] = (
+        jax.random.normal(keys[5], (cfg.conv_kernel, cfg.d_rnn), jnp.float32)
+        * (cfg.conv_kernel ** -0.5)
+    )
+    base["conv_b"] = jnp.zeros((cfg.d_rnn,), jnp.float32)
+    # Lambda parameterizes a = sigmoid(Lambda); init so a^c in [0.9, 0.999]
+    u = jnp.linspace(0.9, 0.999, cfg.d_rnn)
+    a = u ** (1.0 / _C_FACTOR)
+    base["lambda_p"] = jnp.log(a / (1.0 - a))
+    return base, adapters
+
+
+def _rglru_scan(
+    x: jax.Array,  # (B, S, d_rnn) — conv'd branch input
+    base: Dict,
+    a_: Dict,
+    acfg: AdapterConfig,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    r = jax.nn.sigmoid(
+        L.linear(x, base["gate_a"], a_.get("gate_a"), acfg).astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        L.linear(x, base["gate_x"], a_.get("gate_x"), acfg).astype(jnp.float32)
+    )
+    a_base = jax.nn.sigmoid(base["lambda_p"].astype(jnp.float32))[None, None]
+    log_a = _C_FACTOR * r * jnp.log(a_base)
+    a_t = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b_t = multiplier * gated_x
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+    if h0 is not None:
+        h = a_cum * h0[:, None] + b_cum
+    else:
+        h = b_cum
+    return h, h[:, -1]
+
+
+def rglru_block(
+    x: jax.Array,  # (B, S, d_model)
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: RglruConfig,
+    acfg: AdapterConfig,
+) -> jax.Array:
+    a_ = adapters or {}
+    xb = L.linear(x, base["in_x"], a_.get("in_x"), acfg)
+    yb = jax.nn.gelu(L.linear(x, base["in_y"], a_.get("in_y"), acfg))
+    xb = _causal_conv(xb, base["conv_w"], base["conv_b"])
+    h, _ = _rglru_scan(xb, base, a_, acfg)
+    merged = h.astype(x.dtype) * yb
+    return L.linear(merged, base["out"], a_.get("out"), acfg)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_rglru_cache(batch: int, cfg: RglruConfig, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_rnn), dtype),
+    }
+
+
+def rglru_decode(
+    x: jax.Array,  # (B, 1, d_model)
+    cache: Dict,
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: RglruConfig,
+    acfg: AdapterConfig,
+) -> Tuple[jax.Array, Dict]:
+    a_ = adapters or {}
+    xb = L.linear(x, base["in_x"], a_.get("in_x"), acfg)  # (B,1,d_rnn)
+    yb = jax.nn.gelu(L.linear(x, base["in_y"], a_.get("in_y"), acfg))
+    window = jnp.concatenate([cache["conv"], xb.astype(cache["conv"].dtype)], axis=1)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), base["conv_w"])
+        + base["conv_b"]
+    )
+    xb1 = conv_out[:, None, :].astype(x.dtype)
+    r = jax.nn.sigmoid(
+        L.linear(xb1, base["gate_a"], a_.get("gate_a"), acfg).astype(jnp.float32)
+    )[:, 0]
+    i = jax.nn.sigmoid(
+        L.linear(xb1, base["gate_x"], a_.get("gate_x"), acfg).astype(jnp.float32)
+    )[:, 0]
+    a_base = jax.nn.sigmoid(base["lambda_p"].astype(jnp.float32))[None]
+    log_a = _C_FACTOR * r * jnp.log(a_base)
+    a_t = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a_t * cache["h"] + mult * (i * xb1[:, 0].astype(jnp.float32))
+    merged = h[:, None, :].astype(x.dtype) * yb
+    out = L.linear(merged, base["out"], a_.get("out"), acfg)
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,226 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+All dense projections (in/x/dt/out) are RimcLinear — the paper's DoRA
+side-car applies to the SSM family exactly as to attention (DESIGN.md §4).
+The A_log/D/conv parameters are per-channel "peripheral" parameters
+(digital, frozen during calibration, like norm scales).
+
+The selective scan is computed chunk-parallel: ``lax.scan`` carries the
+(d_inner, state) SSM state across chunks while an ``associative_scan``
+parallelizes within a chunk — the TPU-friendly analogue of Mamba's
+hardware-aware fused scan. ``kernels/selective_scan.py`` provides the
+Pallas fast path; this file is the reference semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dora import AdapterConfig
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmConfig:
+    d_model: int
+    d_inner: int  # typically 2 * d_model
+    state_dim: int = 16
+    conv_kernel: int = 4
+    dt_rank: int = 0  # 0 -> d_model // 16
+    chunk: int = 128  # within-chunk parallel scan size
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+
+def init_ssm(
+    key: jax.Array, cfg: SsmConfig, acfg: AdapterConfig, dtype=jnp.bfloat16
+) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, 6)
+    base: Dict = {}
+    adapters: Dict = {}
+    # in_proj produces both the SSM stream x and the gate z.
+    base["in_proj"], adapters["in_proj"] = L.init_linear(
+        keys[0], cfg.d_model, 2 * cfg.d_inner, acfg, dtype=dtype
+    )
+    base["x_proj"], adapters["x_proj"] = L.init_linear(
+        keys[1], cfg.d_inner, cfg.dt_rank_ + 2 * cfg.state_dim, acfg, dtype=dtype
+    )
+    base["dt_proj"], adapters["dt_proj"] = L.init_linear(
+        keys[2], cfg.dt_rank_, cfg.d_inner, acfg, dtype=dtype
+    )
+    base["out_proj"], adapters["out_proj"] = L.init_linear(
+        keys[3], cfg.d_inner, cfg.d_model, acfg, dtype=dtype
+    )
+    # peripherals (digital, frozen)
+    base["conv_w"] = (
+        jax.random.normal(keys[4], (cfg.conv_kernel, cfg.d_inner), jnp.float32)
+        * (cfg.conv_kernel ** -0.5)
+    ).astype(jnp.float32)
+    base["conv_b"] = jnp.zeros((cfg.d_inner,), jnp.float32)
+    # S4D-real init: A = -(1..N) per channel
+    a_init = jnp.tile(
+        jnp.arange(1, cfg.state_dim + 1, dtype=jnp.float32)[None, :],
+        (cfg.d_inner, 1),
+    )
+    base["a_log"] = jnp.log(a_init)
+    base["d_skip"] = jnp.ones((cfg.d_inner,), jnp.float32)
+    base["dt_bias"] = jnp.log(
+        jnp.exp(
+            jax.random.uniform(keys[5], (cfg.d_inner,), jnp.float32, 1e-3, 1e-1)
+        )
+        - 1.0
+        + 1e-9
+    )
+    return base, adapters
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed sum: sum_j w[j] * x[t - (K-1) + j]
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j : j + x.shape[1], :] * w[j][None, None, :].astype(x.dtype)
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def _ssm_params(x: jax.Array, base, a, cfg: SsmConfig, acfg):
+    """Input-dependent dt, B, C (selection mechanism)."""
+    proj = L.linear(x, base["x_proj"], a.get("x_proj"), acfg)
+    dt_low = proj[..., : cfg.dt_rank_]
+    b_sel = proj[..., cfg.dt_rank_ : cfg.dt_rank_ + cfg.state_dim]
+    c_sel = proj[..., cfg.dt_rank_ + cfg.state_dim :]
+    dt = L.linear(dt_low, base["dt_proj"], a.get("dt_proj"), acfg)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + base["dt_bias"][None, None, :]
+    )
+    return dt, b_sel.astype(jnp.float32), c_sel.astype(jnp.float32)
+
+
+def selective_scan(
+    x: jax.Array,  # (B, S, d_inner)
+    dt: jax.Array,  # (B, S, d_inner) f32
+    a_log: jax.Array,  # (d_inner, N)
+    b_sel: jax.Array,  # (B, S, N)
+    c_sel: jax.Array,  # (B, S, N)
+    d_skip: jax.Array,  # (d_inner,)
+    chunk: int = 128,
+    h0: Optional[jax.Array] = None,  # (B, d_inner, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked parallel selective scan. Returns (y, h_final)."""
+    bsz, s, d = x.shape
+    n = a_log.shape[-1]
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))  # (d, N)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_sel = jnp.pad(b_sel, ((0, 0), (0, pad), (0, 0)))
+        c_sel = jnp.pad(c_sel, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    xs = x.reshape(bsz, nc, chunk, d).astype(jnp.float32)
+    dts = dt.reshape(bsz, nc, chunk, d)
+    bs = b_sel.reshape(bsz, nc, chunk, n)
+    cs = c_sel.reshape(bsz, nc, chunk, n)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def chunk_step(h_in, inp):
+        xc, dtc, bc, cc = inp  # (B, chunk, ...)
+        a_t = jnp.exp(dtc[..., None] * neg_a[None, None])  # (B,c,d,N)
+        b_t = (dtc * xc)[..., None] * bc[:, :, None, :]  # (B,c,d,N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+        h = a_cum * h_in[:, None] + b_cum  # (B,c,d,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, cc)
+        return h[:, -1], y
+
+    h_fin, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            jnp.moveaxis(xs, 1, 0),
+            jnp.moveaxis(dts, 1, 0),
+            jnp.moveaxis(bs, 1, 0),
+            jnp.moveaxis(cs, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s + pad, d)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * d_skip[None, None]
+    return y, h_fin
+
+
+def ssm_block(
+    x: jax.Array,  # (B, S, d_model)
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: SsmConfig,
+    acfg: AdapterConfig,
+) -> jax.Array:
+    a = adapters or {}
+    xz = L.linear(x, base["in_proj"], a.get("in_proj"), acfg)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = _causal_conv(xs, base["conv_w"], base["conv_b"])
+    xs = jax.nn.silu(xs)
+    dt, b_sel, c_sel = _ssm_params(xs, base, a, cfg, acfg)
+    y, _ = selective_scan(
+        xs, dt, base["a_log"], b_sel, c_sel, base["d_skip"], cfg.chunk
+    )
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return L.linear(y, base["out_proj"], a.get("out_proj"), acfg)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(batch: int, cfg: SsmConfig, dtype=jnp.float32) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    }
+
+
+def ssm_decode(
+    x: jax.Array,  # (B, 1, d_model)
+    cache: Dict,
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: SsmConfig,
+    acfg: AdapterConfig,
+) -> Tuple[jax.Array, Dict]:
+    a = adapters or {}
+    xz = L.linear(x, base["in_proj"], a.get("in_proj"), acfg)
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B,1,d_inner)
+    # conv over the cached window + current input
+    window = jnp.concatenate([cache["conv"], xs.astype(cache["conv"].dtype)], axis=1)
+    w = base["conv_w"]
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), w
+    ) + base["conv_b"]
+    xs1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)  # (B,1,d_inner)
+    dt, b_sel, c_sel = _ssm_params(xs1, base, a, cfg, acfg)
+    neg_a = -jnp.exp(base["a_log"].astype(jnp.float32))
+    dt0 = dt[:, 0]  # (B, d)
+    a_t = jnp.exp(dt0[..., None] * neg_a[None])  # (B,d,N)
+    b_t = (dt0 * xs1[:, 0].astype(jnp.float32))[..., None] * b_sel[:, 0, None, :]
+    h = a_t * cache["h"] + b_t
+    y = jnp.einsum("bdn,bn->bd", h, c_sel[:, 0])
+    y = y + xs1[:, 0].astype(jnp.float32) * base["d_skip"][None]
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = L.linear(y, base["out_proj"], a.get("out_proj"), acfg)
+    new_cache = {"h": h, "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,702 @@
+"""Unified model assembly for all assigned architectures.
+
+One ``ModelConfig`` describes dense/GQA/MLA attention stacks, local:global
+mixes, sliding-window, MoE FFNs, Mamba SSM stacks, RG-LRU hybrids,
+encoder-decoder (audio frontend stub) and prefix-LM VLMs (vision stub).
+
+Layer layout: ``prologue`` (unrolled, heterogeneous) + ``body`` (layers
+stacked and run under ``jax.lax.scan`` in groups of ``scan_period`` to keep
+HLO size / compile time bounded at 512-way SPMD) + ``epilogue`` (unrolled
+remainder).
+
+Every projection is a RimcLinear (drifted RRAM base + DoRA side-car);
+norms/embeddings are digital peripherals (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dora import AdapterConfig
+from repro.core.rram import RramConfig, DEFAULT_RRAM
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssm as S
+
+Pytree = Any
+
+MIXER_KINDS = ("attn", "local", "swa", "ssm", "rglru")
+FFN_KINDS = ("mlp", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab: int
+    attn: Optional[A.AttentionConfig] = None
+    mlp: Optional[L.MlpConfig] = None
+    moe: Optional[M.MoeConfig] = None
+    ssm: Optional[S.SsmConfig] = None
+    rglru: Optional[R.RglruConfig] = None
+    # mixer pattern cycled over non-prologue layers, e.g. 5*("local",)+("attn",)
+    mixer_pattern: Tuple[str, ...] = ("attn",)
+    local_window: int = 1024
+    # ffn pattern cycled likewise ("mlp" | "moe" | "none")
+    ffn_pattern: Tuple[str, ...] = ("mlp",)
+    # number of initial layers with ``prologue_ffn`` instead (deepseek-v2's
+    # dense first layer)
+    prologue_layers: int = 0
+    prologue_ffn: str = "mlp"
+    norm: str = "rms"  # 'rms' | 'layer'
+    embed_scale: bool = False  # gemma-style sqrt(d) embedding scaling
+    tie_lm_head: bool = True
+    adapter: AdapterConfig = AdapterConfig()
+    rram: RramConfig = DEFAULT_RRAM
+    dtype: Any = jnp.bfloat16
+    # encoder-decoder (seamless-m4t). Encoder input arrives as precomputed
+    # frame embeddings (audio frontend stub).
+    encoder_layers: int = 0
+    # prefix-LM (paligemma): first ``vision_tokens`` positions are
+    # precomputed patch embeddings attending bidirectionally.
+    vision_tokens: int = 0
+    remat: bool = True
+    # Unroll all layers instead of lax.scan groups. The dry-run lowers
+    # unrolled so cost_analysis counts every layer (scan bodies are counted
+    # once per trip otherwise); training keeps scan for compile speed.
+    unroll: bool = False
+
+    @property
+    def scan_period(self) -> int:
+        return len(self.mixer_pattern)
+
+    def layer_kinds(self) -> List[Tuple[str, str]]:
+        kinds = []
+        for i in range(self.n_layers):
+            mixer = self.mixer_pattern[i % len(self.mixer_pattern)]
+            if i < self.prologue_layers:
+                ffn = self.prologue_ffn
+            else:
+                ffn = self.ffn_pattern[i % len(self.ffn_pattern)]
+            kinds.append((mixer, ffn))
+        return kinds
+
+    def body_layout(self) -> Tuple[int, int, int]:
+        """(prologue, n_groups, epilogue) layer counts."""
+        body = self.n_layers - self.prologue_layers
+        p = self.scan_period
+        # only scan when the ffn pattern is compatible with the period
+        if self.unroll or len(self.ffn_pattern) not in (1, p) or body < 2 * p:
+            return (self.n_layers, 0, 0)  # fully unrolled (small models)
+        n_groups = body // p
+        epilogue = body % p
+        return (self.prologue_layers, n_groups, epilogue)
+
+
+def _norm_init(cfg: ModelConfig):
+    return (
+        L.init_rmsnorm(cfg.d_model)
+        if cfg.norm == "rms"
+        else L.init_layernorm(cfg.d_model)
+    )
+
+
+def _norm(x, p, cfg: ModelConfig):
+    return L.rms_norm(x, p) if cfg.norm == "rms" else L.layer_norm(x, p)
+
+
+def _attn_cfg(cfg: ModelConfig, kind: str, cross: bool = False):
+    base = cfg.attn
+    window = None
+    if kind == "local":
+        window = cfg.local_window
+    elif kind == "swa":
+        window = cfg.local_window
+    return dataclasses.replace(base, window=window, is_cross=cross)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_layer(
+    key: jax.Array, cfg: ModelConfig, mixer: str, ffn: str, *, cross: bool = False
+) -> Tuple[Dict, Dict]:
+    keys = jax.random.split(key, 4)
+    base: Dict = {"norm1": _norm_init(cfg)}
+    adapters: Dict = {}
+    if mixer in ("attn", "local", "swa"):
+        base["mixer"], adapters["mixer"] = A.init_attention(
+            keys[0], _attn_cfg(cfg, mixer), cfg.adapter, cfg.dtype
+        )
+    elif mixer == "ssm":
+        base["mixer"], adapters["mixer"] = S.init_ssm(
+            keys[0], cfg.ssm, cfg.adapter, cfg.dtype
+        )
+    elif mixer == "rglru":
+        base["mixer"], adapters["mixer"] = R.init_rglru(
+            keys[0], cfg.rglru, cfg.adapter, cfg.dtype
+        )
+    else:
+        raise ValueError(mixer)
+    if cross:
+        base["norm_x"] = _norm_init(cfg)
+        base["xattn"], adapters["xattn"] = A.init_attention(
+            keys[1], _attn_cfg(cfg, "attn", cross=True), cfg.adapter, cfg.dtype
+        )
+    if ffn == "mlp":
+        base["norm2"] = _norm_init(cfg)
+        base["ffn"], adapters["ffn"] = L.init_mlp(
+            keys[2], cfg.mlp, cfg.adapter, cfg.dtype
+        )
+    elif ffn == "moe":
+        base["norm2"] = _norm_init(cfg)
+        base["ffn"], adapters["ffn"] = M.init_moe(
+            keys[2], cfg.moe, cfg.adapter, cfg.dtype
+        )
+    return base, adapters
+
+
+def block_forward(
+    h: jax.Array,
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: ModelConfig,
+    mixer: str,
+    ffn: str,
+    *,
+    positions: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+) -> jax.Array:
+    a_ = adapters or {}
+    x = _norm(h, base["norm1"], cfg)
+    if mixer in ("attn", "local", "swa"):
+        acfg = _attn_cfg(cfg, mixer)
+        mix = A.attention(
+            x, base["mixer"], a_.get("mixer"), acfg, cfg.adapter,
+            positions=positions, mask=mask,
+        )
+    elif mixer == "ssm":
+        mix = S.ssm_block(x, base["mixer"], a_.get("mixer"), cfg.ssm, cfg.adapter)
+    elif mixer == "rglru":
+        mix = R.rglru_block(x, base["mixer"], a_.get("mixer"), cfg.rglru, cfg.adapter)
+    else:
+        raise ValueError(mixer)
+    h = h + mix
+    if "xattn" in base:
+        x = _norm(h, base["norm_x"], cfg)
+        h = h + A.attention(
+            x, base["xattn"], a_.get("xattn"),
+            _attn_cfg(cfg, "attn", cross=True), cfg.adapter, kv_input=enc_out,
+        )
+    if ffn == "mlp":
+        x = _norm(h, base["norm2"], cfg)
+        h = h + L.mlp(x, base["ffn"], a_.get("ffn"), cfg.mlp, cfg.adapter)
+    elif ffn == "moe":
+        x = _norm(h, base["norm2"], cfg)
+        h = h + M.moe_block(x, base["ffn"], a_.get("ffn"), cfg.moe, cfg.adapter)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
+    """Returns {"base": ..., "adapters": ...} with mirrored structure."""
+    keys = jax.random.split(key, cfg.n_layers + cfg.encoder_layers + 3)
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    base: Dict = {}
+    adapters: Dict = {}
+    base["embed"] = L.init_embedding(keys[0], cfg.vocab, cfg.d_model, cfg.dtype)
+    base["final_norm"] = _norm_init(cfg)
+    if not cfg.tie_lm_head:
+        base["lm_head"], adapters["lm_head"] = L.init_linear(
+            keys[1], cfg.d_model, cfg.vocab, cfg.adapter, dtype=cfg.dtype
+        )
+
+    is_dec_cross = cfg.encoder_layers > 0
+
+    def make(i):
+        mixer, ffn = kinds[i]
+        return init_layer(keys[3 + i], cfg, mixer, ffn, cross=is_dec_cross)
+
+    base["prologue"], adapters["prologue"] = [], []
+    for i in range(pro):
+        b, a_ = make(i)
+        base["prologue"].append(b)
+        adapters["prologue"].append(a_)
+    if n_groups:
+        group_bases, group_ads = [], []
+        for g in range(n_groups):
+            bs, as_ = zip(*[make(pro + g * p + j) for j in range(p)])
+            group_bases.append(list(bs))
+            group_ads.append(list(as_))
+        base["body"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *group_bases
+        )
+        adapters["body"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *group_ads
+        )
+    base["epilogue"], adapters["epilogue"] = [], []
+    for i in range(cfg.n_layers - epi, cfg.n_layers):
+        b, a_ = make(i)
+        base["epilogue"].append(b)
+        adapters["epilogue"].append(a_)
+
+    if cfg.encoder_layers:
+        enc_b, enc_a = [], []
+        for e in range(cfg.encoder_layers):
+            b, a_ = init_layer(
+                keys[3 + cfg.n_layers + e], cfg, "attn", "mlp", cross=False
+            )
+            enc_b.append(b)
+            enc_a.append(a_)
+        if cfg.unroll:
+            base["encoder"] = enc_b
+            adapters["encoder"] = enc_a
+        else:
+            base["encoder"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *enc_b
+            )
+            adapters["encoder"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *enc_a
+            )
+        base["enc_norm"] = _norm_init(cfg)
+    return {"base": base, "adapters": adapters}
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _prefix_mask(s: int, prefix: int) -> jax.Array:
+    """Prefix-LM mask: bidirectional over [0, prefix), causal after."""
+    q = jnp.arange(s)[:, None]
+    k = jnp.arange(s)[None, :]
+    return (k <= q) | (k < prefix)
+
+
+def encode(base, adapters, enc_embeds, cfg: ModelConfig) -> jax.Array:
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    s = enc_embeds.shape[1]
+    mask = jnp.ones((s, s), bool)
+    positions = jnp.arange(s)[None]
+
+    if cfg.unroll:
+        h = enc_embeds
+        enc_a = adapters.get("encoder") or [{}] * cfg.encoder_layers
+        for b, a_ in zip(base["encoder"], enc_a):
+            h = block_forward(h, b, a_, cfg, "attn", "mlp", mask=mask,
+                              positions=positions)
+        return _norm(h, base["enc_norm"], cfg)
+
+    def enc_block(h, xs):
+        b, a_ = xs
+        h = block_forward(
+            h, b, a_, cfg, "attn", "mlp", mask=mask, positions=positions,
+        )
+        return h, None
+
+    f = _maybe_remat(enc_block, cfg)
+    h, _ = jax.lax.scan(f, enc_embeds, (base["encoder"], adapters.get("encoder")))
+    return _norm(h, base["enc_norm"], cfg)
+
+
+def forward(
+    params: Dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    *,
+    use_adapters: bool = True,
+) -> jax.Array:
+    """Full-sequence forward -> logits. ``batch`` keys:
+    tokens (B,S) int32; optional enc_embeds (B,S_src,d) [enc-dec];
+    optional patch_embeds (B,P,d) [vlm]."""
+    base = params["base"]
+    adapters = params.get("adapters") if use_adapters else None
+    if not adapters:
+        # container skeleton with empty leaf-dicts (teacher/pure-RRAM path);
+        # base mirrors the adapter tree's containers, so derive from it
+        adapters = _empty_adapters(base)
+    h = L.embed(batch["tokens"], base["embed"], scale_by_sqrt_dim=cfg.embed_scale)
+    mask = None
+    prefix = 0
+    if cfg.vision_tokens and "patch_embeds" in batch:
+        h = jnp.concatenate([batch["patch_embeds"].astype(h.dtype), h], axis=1)
+        prefix = batch["patch_embeds"].shape[1]
+        mask = _prefix_mask(h.shape[1], prefix)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(base, adapters, batch["enc_embeds"].astype(h.dtype), cfg)
+    s = h.shape[1]
+    positions = jnp.arange(s)[None]
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+
+    def run_block(h, b, a_, i_kind, local_mask):
+        mixer, ffn = i_kind
+        return block_forward(
+            h, b, a_, cfg, mixer, ffn,
+            positions=positions, mask=local_mask, enc_out=enc_out,
+        )
+
+    idx = 0
+    for i in range(pro):
+        h = run_block(h, base["prologue"][i], adapters["prologue"][i], kinds[i], mask)
+        idx += 1
+    if n_groups:
+        body_kinds = [kinds[pro + j] for j in range(p)]
+
+        def group(h, xs):
+            bs, as_ = xs
+            for j in range(p):
+                h = run_block(h, bs[j], as_[j], body_kinds[j], mask)
+            return h, None
+
+        f = _maybe_remat(group, cfg)
+        h, _ = jax.lax.scan(f, h, (base["body"], adapters.get("body")))
+        idx += n_groups * p
+    for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+        h = run_block(h, base["epilogue"][j], adapters["epilogue"][j], kinds[i], mask)
+    h = _norm(h, base["final_norm"], cfg)
+    logits = _lm_head(h, base, adapters, cfg)
+    if prefix:
+        logits = logits[:, prefix:]
+    return logits
+
+
+def _lm_head(h, base, adapters, cfg: ModelConfig):
+    if cfg.tie_lm_head:
+        w = base["embed"]["embedding"]
+        return h @ w.astype(h.dtype).T
+    return L.linear(h, base["lm_head"], adapters.get("lm_head"), cfg.adapter)
+
+
+def _none_like(tree):
+    """Adapter tree of the same *container* shape but with empty leaf dicts,
+    so teacher paths skip side-cars. Lists/dicts preserved; stacked arrays
+    in scan bodies are passed through (ignored when adapters dict is falsy
+    at the layer level — we instead map to {})."""
+    return jax.tree_util.tree_map(lambda x: x, _empty_adapters(tree))
+
+
+def _empty_adapters(tree):
+    if isinstance(tree, dict):
+        return {k: _empty_adapters(v) for k, v in tree.items() if isinstance(v, (dict, list))}
+    if isinstance(tree, list):
+        return [_empty_adapters(v) for v in tree]
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# feature-based layer-wise calibration loss (paper Algorithm 1 + 2)
+# ---------------------------------------------------------------------------
+#
+# The student block receives the *teacher's* block input (h is always the
+# teacher activation), so gradients w.r.t. a block's DoRA parameters never
+# cross block boundaries — "layer-wise, no backpropagation" (§III-B) as a
+# single jittable step. Summing per-layer MSEs yields exactly the per-layer
+# gradients of Algorithm 1's inner loop.
+
+
+def feature_calibration_loss(
+    teacher_base: Dict,
+    student_base: Dict,
+    adapters: Dict,
+    batch: Dict,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict]:
+    h = L.embed(batch["tokens"], teacher_base["embed"],
+                scale_by_sqrt_dim=cfg.embed_scale)
+    mask = None
+    if cfg.vision_tokens and "patch_embeds" in batch:
+        h = jnp.concatenate([batch["patch_embeds"].astype(h.dtype), h], axis=1)
+        mask = _prefix_mask(h.shape[1], batch["patch_embeds"].shape[1])
+    s = h.shape[1]
+    positions = jnp.arange(s)[None]
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    loss = jnp.zeros((), jnp.float32)
+    n_terms = 0
+
+    enc_out = None
+    if cfg.encoder_layers:
+        src = batch["enc_embeds"].astype(h.dtype)
+        s_src = src.shape[1]
+        enc_mask = jnp.ones((s_src, s_src), bool)
+        enc_pos = jnp.arange(s_src)[None]
+
+        def enc_pair_one(he, tb, sb, a_):
+            t_out = block_forward(he, tb, {}, cfg, "attn", "mlp",
+                                  positions=enc_pos, mask=enc_mask)
+            s_out = block_forward(he, sb, a_, cfg, "attn", "mlp",
+                                  positions=enc_pos, mask=enc_mask)
+            return t_out, _mse(t_out, s_out)
+
+        if cfg.unroll:
+            h_enc = src
+            for tb, sb, a_ in zip(teacher_base["encoder"],
+                                  student_base["encoder"],
+                                  adapters.get("encoder")):
+                h_enc, l_ = enc_pair_one(h_enc, tb, sb, a_)
+                loss = loss + l_
+        else:
+            def enc_pair(carry, xs):
+                he, acc = carry
+                t_out, l_ = enc_pair_one(he, *xs)
+                return (t_out, acc + l_), None
+
+            f = _maybe_remat(enc_pair, cfg)
+            (h_enc, loss), _ = jax.lax.scan(
+                f, (src, loss),
+                (teacher_base["encoder"], student_base["encoder"],
+                 adapters.get("encoder")),
+            )
+        enc_out = _norm(h_enc, teacher_base["enc_norm"], cfg)
+        n_terms += cfg.encoder_layers
+
+    def pair(h, tb, sb, a_, kind):
+        mixer, ffn = kind
+        t_out = block_forward(h, tb, {}, cfg, mixer, ffn,
+                              positions=positions, mask=mask, enc_out=enc_out)
+        s_out = block_forward(h, sb, a_, cfg, mixer, ffn,
+                              positions=positions, mask=mask, enc_out=enc_out)
+        return t_out, _mse(t_out, s_out)
+
+    for i in range(pro):
+        h, l_ = pair(h, teacher_base["prologue"][i], student_base["prologue"][i],
+                     adapters["prologue"][i], kinds[i])
+        loss = loss + l_
+        n_terms += 1
+    if n_groups:
+        body_kinds = [kinds[pro + j] for j in range(p)]
+
+        def group(carry, xs):
+            h, acc = carry
+            tbs, sbs, as_ = xs
+            for j in range(p):
+                h, l_ = pair(h, tbs[j], sbs[j], as_[j], body_kinds[j])
+                acc = acc + l_
+            return (h, acc), None
+
+        f = _maybe_remat(group, cfg)
+        (h, loss), _ = jax.lax.scan(
+            f, (h, loss),
+            (teacher_base["body"], student_base["body"], adapters.get("body")),
+        )
+        n_terms += n_groups * p
+    for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+        h, l_ = pair(h, teacher_base["epilogue"][j], student_base["epilogue"][j],
+                     adapters["epilogue"][j], kinds[i])
+        loss = loss + l_
+        n_terms += 1
+
+    # LM head (untied heads live in RRAM -> align logits too)
+    if not cfg.tie_lm_head:
+        hn = _norm(h, teacher_base["final_norm"], cfg)
+        t_logits = L.linear(hn, teacher_base["lm_head"], {}, cfg.adapter)
+        s_logits = L.linear(
+            hn, student_base["lm_head"], adapters.get("lm_head"), cfg.adapter
+        )
+        loss = loss + _mse(t_logits, s_logits)
+        n_terms += 1
+    loss = loss / n_terms
+    return loss, {"feature_mse": loss}
+
+
+def _mse(a: jax.Array, b: jax.Array) -> jax.Array:
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.mean(d * d)
+
+
+# ---------------------------------------------------------------------------
+# decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> Dict:
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+
+    def layer_cache(mixer):
+        if mixer in ("attn", "local", "swa"):
+            return A.init_kv_cache(batch, max_len, _attn_cfg(cfg, mixer), cfg.dtype)
+        if mixer == "ssm":
+            return S.init_ssm_cache(batch, cfg.ssm)
+        if mixer == "rglru":
+            return R.init_rglru_cache(batch, cfg.rglru)
+        raise ValueError(mixer)
+
+    cache: Dict = {"prologue": [layer_cache(kinds[i][0]) for i in range(pro)]}
+    if n_groups:
+        groups = []
+        for g in range(n_groups):
+            groups.append([layer_cache(kinds[pro + g * p + j][0]) for j in range(p)])
+        cache["body"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *groups)
+    cache["epilogue"] = [
+        layer_cache(kinds[i][0]) for i in range(cfg.n_layers - epi, cfg.n_layers)
+    ]
+    if cfg.encoder_layers:
+        # Encoder output cached once at prefill; cross-attention K/V are
+        # recomputed from it per layer inside the step (small relative to
+        # the decode matmuls; folding K/V into the cache is a hillclimb).
+        cache["enc_out"] = jnp.zeros((batch, max(src_len, 1), cfg.d_model), cfg.dtype)
+    return cache
+
+
+def _decode_block(
+    h, cache_l, pos, b, a_, cfg: ModelConfig, mixer: str, ffn: str,
+    enc_out=None,
+):
+    a_ = a_ or {}
+    x = _norm(h, b["norm1"], cfg)
+    if mixer in ("attn", "local", "swa"):
+        acfg = _attn_cfg(cfg, mixer)
+        mix, new_cache = A.decode_attention(
+            x, cache_l, pos, b["mixer"], a_.get("mixer"), acfg, cfg.adapter
+        )
+    elif mixer == "ssm":
+        mix, new_cache = S.ssm_decode(
+            x, cache_l, b["mixer"], a_.get("mixer"), cfg.ssm, cfg.adapter
+        )
+    elif mixer == "rglru":
+        mix, new_cache = R.rglru_decode(
+            x, cache_l, b["mixer"], a_.get("mixer"), cfg.rglru, cfg.adapter
+        )
+    else:
+        raise ValueError(mixer)
+    h = h + mix
+    if "xattn" in b and enc_out is not None:
+        x = _norm(h, b["norm_x"], cfg)
+        h = h + A.attention(
+            x, b["xattn"], a_.get("xattn"),
+            _attn_cfg(cfg, "attn", cross=True), cfg.adapter, kv_input=enc_out,
+        )
+    if ffn in ("mlp", "moe"):
+        x = _norm(h, b["norm2"], cfg)
+        if ffn == "mlp":
+            h = h + L.mlp(x, b["ffn"], a_.get("ffn"), cfg.mlp, cfg.adapter)
+        else:
+            h = h + M.moe_block(x, b["ffn"], a_.get("ffn"), cfg.moe, cfg.adapter)
+    return h, new_cache
+
+
+def decode_step(
+    params: Dict,
+    cache: Dict,
+    tokens: jax.Array,  # (B, 1) int32
+    pos: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict]:
+    base, adapters = params["base"], params["adapters"]
+    h = L.embed(
+        tokens, base["embed"], scale_by_sqrt_dim=cfg.embed_scale, one_hot=True
+    )
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    enc_out = cache.get("enc_out")
+    new_cache: Dict = {"prologue": [], "epilogue": []}
+    if enc_out is not None:
+        new_cache["enc_out"] = enc_out
+    for i in range(pro):
+        h, c = _decode_block(
+            h, cache["prologue"][i], pos, base["prologue"][i],
+            adapters["prologue"][i], cfg, *kinds[i], enc_out=enc_out,
+        )
+        new_cache["prologue"].append(c)
+    if n_groups:
+        body_kinds = [kinds[pro + j] for j in range(p)]
+
+        def group(h, xs):
+            bs, as_, cs = xs
+            new_cs = []
+            for j in range(p):
+                h, c = _decode_block(
+                    h, cs[j], pos, bs[j], as_[j], cfg, *body_kinds[j],
+                    enc_out=enc_out,
+                )
+                new_cs.append(c)
+            return h, new_cs
+
+        h, body_cache = jax.lax.scan(
+            group, h, (base["body"], adapters.get("body"), cache["body"])
+        )
+        new_cache["body"] = body_cache
+    for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+        h, c = _decode_block(
+            h, cache["epilogue"][j], pos, base["epilogue"][j],
+            adapters["epilogue"][j], cfg, *kinds[i], enc_out=enc_out,
+        )
+        new_cache["epilogue"].append(c)
+    h = _norm(h, base["final_norm"], cfg)
+    logits = _lm_head(h, base, adapters, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting (roofline MODEL_FLOPS, paper Eq. 7 at model scale)
+# ---------------------------------------------------------------------------
+
+
+def count_params(params: Dict) -> Tuple[int, int]:
+    """(base_params, adapter_params)."""
+    def size(tree):
+        return sum(
+            x.size for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "size")
+        )
+    return size(params["base"]), size(params["adapters"])
+
+
+def active_param_fraction(cfg: ModelConfig, params: Dict) -> float:
+    """Fraction of parameters that are active per token (1.0 for dense;
+    (shared + top_k/n_experts routed) for MoE FFN weights)."""
+    if cfg.moe is None:
+        return 1.0
+    base, _ = count_params(params)
+    # routed expert weights
+    def routed_size(tree):
+        total = 0
+        for key in ("gate_w", "up_w", "down_w"):
+            total += _tree_key_size(tree, key)
+        return total
+    routed = _tree_key_size(params["base"], "gate_w") + _tree_key_size(
+        params["base"], "up_w"
+    ) + _tree_key_size(params["base"], "down_w")
+    active = base - routed * (1 - cfg.moe.top_k / cfg.moe.n_experts)
+    return active / base
+
+
+def _tree_key_size(tree, key) -> int:
+    total = 0
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if k == key:
+                total += sum(x.size for x in jax.tree_util.tree_leaves(v))
+            else:
+                total += _tree_key_size(v, key)
+    elif isinstance(tree, list):
+        for v in tree:
+            total += _tree_key_size(v, key)
+    return total

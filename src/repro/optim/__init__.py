@@ -1,0 +1,1 @@
+from repro.optim.adam import AdamW, adamw_init, adamw_update  # noqa: F401

@@ -1,0 +1,135 @@
+"""Fault tolerance & scale runtime: preemption handling, straggler
+detection, elastic re-meshing.
+
+The training driver (launch/train.py) wires these together:
+
+* ``PreemptionGuard`` — converts SIGTERM/SIGINT into a "checkpoint now,
+  then exit cleanly" flag checked each step (TPU pods deliver maintenance
+  preemptions as SIGTERM).
+* ``StragglerDetector`` — per-step wall-time ring buffer with a robust
+  z-score; at >1000 hosts slow-HBM or thermally-throttled chips show up
+  as persistent step-time outliers long before they fail. The hook
+  reports and (policy) requests a re-mesh excluding the slow host.
+* ``ElasticPlan`` — given a failed-host count, produce the degraded mesh
+  (launch/mesh.py) + the resharding restore recipe (checkpoint/manager).
+  Because the data pipeline is stateless (data/pipeline.py) and drift is
+  deterministic given the programming key (core/calibrate.py), recovery
+  is exact: restore adapters+opt at step k, re-derive the student base,
+  continue at step k with a smaller data axis.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import signal
+import threading
+import time
+from typing import Callable, Deque, List, Optional
+
+import numpy as np
+
+
+class PreemptionGuard:
+    """Flag-based graceful shutdown. Use as context manager around the
+    training loop; ``should_stop`` flips on SIGTERM/SIGINT."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self._signals = signals
+        self._stop = threading.Event()
+        self._prev = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+        return self
+
+    def _handler(self, signum, frame):
+        self._stop.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop.is_set()
+
+    def request_stop(self):
+        self._stop.set()
+
+    def __exit__(self, *exc):
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        return False
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    median: float
+    mad: float
+    z: float
+
+    @property
+    def is_straggler(self) -> bool:
+        return self.z > 4.0
+
+
+class StragglerDetector:
+    """Robust (median/MAD) outlier detection over recent step times."""
+
+    def __init__(self, window: int = 64, min_samples: int = 16):
+        self.times: Deque[float] = collections.deque(maxlen=window)
+        self.min_samples = min_samples
+        self.reports: List[StragglerReport] = []
+
+    def record(self, step: int, step_time: float) -> Optional[StragglerReport]:
+        self.times.append(step_time)
+        if len(self.times) < self.min_samples:
+            return None
+        arr = np.asarray(self.times)
+        med = float(np.median(arr))
+        mad = float(np.median(np.abs(arr - med))) + 1e-9
+        z = 0.6745 * (step_time - med) / mad
+        report = StragglerReport(step, step_time, med, mad, float(z))
+        if report.is_straggler:
+            self.reports.append(report)
+        return report
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Recipe for recovering onto a degraded mesh."""
+
+    failed_hosts: int
+    new_mesh_shape: tuple
+    restore_step: int
+    notes: str = ""
+
+    @staticmethod
+    def plan(failed_hosts: int, latest_step: Optional[int], *, rows: int = 16):
+        new_rows = rows - failed_hosts
+        if new_rows < 1:
+            raise RuntimeError("insufficient healthy capacity for re-mesh")
+        return ElasticPlan(
+            failed_hosts=failed_hosts,
+            new_mesh_shape=(new_rows, 16),
+            restore_step=latest_step or 0,
+            notes=(
+                "model axis preserved (param shardings stable); data axis "
+                f"shrunk {rows}->{new_rows}; global batch kept — per-device "
+                "batch grows, data pipeline replays deterministically"
+            ),
+        )
+
+
+class StepTimer:
+    """Context timer used by the train loop for the straggler detector."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0
+        return False

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    param_shardings,
+    cache_shardings,
+    batch_shardings,
+    logical_axes,
+    shard_hint,
+    tree_shardings,
+)

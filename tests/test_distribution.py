@@ -1,0 +1,108 @@
+"""Distribution layer: sharding rules + a real multi-device dry-run cell
+(subprocess so XLA_FLAGS device-count forcing doesn't leak into this
+process, which must keep seeing 1 CPU device)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_this_process_sees_one_device():
+    assert len(jax.devices()) == 1
+
+
+def test_rules_divisibility_guard():
+    """Specs never request sharding a dim that the mesh axis doesn't divide."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.sharding import rules as sh
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+tree = {
+    "mixer": {"q": {"w": jax.ShapeDtypeStruct((16, 10), jnp.float32)}},  # 10 % 4 != 0
+    "ffn": {"up": {"w": jax.ShapeDtypeStruct((16, 32), jnp.float32)}},
+}
+shd = sh.param_shardings(tree, mesh, dp=("data",), tp="model")
+assert shd["mixer"]["q"]["w"].spec == P(None, None), shd["mixer"]["q"]["w"].spec
+assert shd["ffn"]["up"]["w"].spec == P(None, "model")
+print("RULES_OK")
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert "RULES_OK" in out.stdout, out.stdout + out.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_cell_compiles_multidevice():
+    """End-to-end dry-run of a smoke config on a (2,2,2) pod-data-model
+    mesh with 8 fake devices: lower + compile + cost/memory analysis."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_arch
+from repro.configs.shapes import ShapeSpec
+from repro.launch import dryrun
+from repro.launch import mesh as mesh_lib
+
+# monkeypatch a small production mesh
+mesh_lib.make_production_mesh = lambda multi_pod=False: (
+    jax.make_mesh((2, 2, 2), ("pod", "data", "model")) if multi_pod
+    else jax.make_mesh((2, 4), ("data", "model"))
+)
+arch = get_arch("qwen3_1_7b")
+small = ShapeSpec("train_small", "train", 64, 8)
+arch.shapes["train_small"] = small
+rl, msg = dryrun.run_cell("qwen3_1_7b", "train_small", multi_pod=False, smoke=True)
+assert rl is not None and rl.flops > 0 and rl.coll_bytes >= 0
+print("SINGLE_OK", msg)
+arch.shapes["dec_small"] = ShapeSpec("dec_small", "decode", 64, 8)
+rl2, msg2 = dryrun.run_cell("qwen3_1_7b", "dec_small", multi_pod=True, smoke=True)
+print("MULTI_OK", msg2)
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC}, timeout=600,
+    )
+    assert "SINGLE_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]
+    assert "MULTI_OK" in out.stdout, out.stdout[-2000:] + out.stderr[-3000:]
+
+
+def test_collective_bytes_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+  %ag = bf16[16,512]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%sum
+  %rs = (f32[64]{0}, f32[64]{0}) reduce-scatter(%a, %b)
+  %nothing = f32[4]{0} add(%p, %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 512 * 2
+    assert out["all-reduce"] == 128 * 4
+    assert out["reduce-scatter"] == 2 * 64 * 4
+    assert out["_counts"]["all-gather"] == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.launch.roofline import Roofline, PEAK_FLOPS
+    rl = Roofline(
+        arch="a", shape="s", mesh="m",
+        flops=PEAK_FLOPS, bytes_accessed=0.0, coll_bytes=0.0,
+        coll_breakdown={}, peak_memory=1, model_flops=PEAK_FLOPS / 2,
+    )
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.bottleneck == "compute"
+    assert rl.roofline_fraction == pytest.approx(0.5)
+    assert rl.useful_flop_ratio == pytest.approx(0.5)

@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), with shape/dtype
+sweeps and hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dora, rram
+from repro.kernels import ops, ref
+from repro.kernels.dora_linear import dora_linear
+from repro.kernels.crossbar_mvm import crossbar_mvm
+
+
+def _mk(m, k, n, r, seed=0, drift=0.1, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    w = jax.random.normal(k1, (k, n)) * 0.05
+    rcfg = rram.RramConfig(relative_drift=drift)
+    xw = rram.apply_drift(rram.program(w, rcfg), rcfg, k2)
+    ad = dora.init_adapter(
+        k3, k, n, dora.AdapterConfig(rank=r), w_base=rram.dequantize(xw)
+    )
+    ad["lora_b"] = jax.random.normal(k4, (r, n)) * 0.02
+    x = (jax.random.normal(k2, (m, k)) * 0.5).astype(dtype)
+    return x, xw, ad
+
+
+@pytest.mark.parametrize(
+    "m,k,n,r",
+    [
+        (128, 128, 128, 4),
+        (128, 256, 384, 8),
+        (256, 512, 128, 16),
+        (128, 128, 256, 64),
+    ],
+)
+def test_dora_linear_vs_oracle_shapes(m, k, n, r):
+    x, xw, ad = _mk(m, k, n, r)
+    gamma = ops.dora_gamma(xw, ad)
+    y = dora_linear(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1).astype(jnp.float32),
+        ad["lora_a"], ad["lora_b"], gamma, interpret=True,
+    )
+    y_ref = ref.dora_linear_ref(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1),
+        ad["lora_a"], ad["lora_b"], gamma,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rimc_linear_wrapper_padding_and_dtypes(dtype):
+    # ragged shapes exercise the padding path
+    x, xw, ad = _mk(70, 200, 150, 8, dtype=dtype)
+    y = ops.rimc_linear(x, xw, ad)
+    w = rram.dequantize(xw)
+    acfg = dora.AdapterConfig(rank=8)
+    merged = dora.merge_magnitude(w, ad, acfg)
+    y_ref = dora.adapted_forward(
+        x.astype(jnp.float32), w, ad, acfg, merged_norm=merged
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (128, 512, 256)])
+def test_crossbar_mvm_vs_tile_oracle(m, k, n):
+    """Same tiling, DAC reference and ADC behaviour as the oracle; only
+    f32 accumulation-order rounding (~1e-7) may differ across K tiles."""
+    x, xw, _ = _mk(m, k, n, 4)
+    y = crossbar_mvm(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1).astype(jnp.float32),
+        interpret=True,
+    )
+    y_ref = ref.crossbar_mvm_ref(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1)
+    )
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_crossbar_mvm_adc_close_to_ideal():
+    x, xw, _ = _mk(128, 512, 128, 4)
+    y = ops.rimc_mvm_adc(x, xw)
+    ideal = x @ rram.dequantize(xw)
+    rel = np.abs(np.asarray(y - ideal)) / (np.abs(np.asarray(ideal)).max() + 1e-9)
+    assert rel.max() < 0.05
+
+
+def test_dora_linear_zero_adapter_is_crossbar_matmul():
+    x, xw, ad = _mk(128, 128, 128, 4)
+    ad["lora_b"] = jnp.zeros_like(ad["lora_b"])
+    gamma = jnp.ones((1, 128), jnp.float32)
+    y = dora_linear(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1).astype(jnp.float32),
+        ad["lora_a"], ad["lora_b"], gamma, interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ rram.dequantize(xw)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mi=st.integers(1, 3), ki=st.integers(1, 3), ni=st.integers(1, 3),
+    r=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2 ** 16),
+)
+def test_property_dora_linear_matches_oracle(mi, ki, ni, r, seed):
+    m, k, n = 128 * mi, 128 * ki, 128 * ni
+    x, xw, ad = _mk(m, k, n, r, seed=seed)
+    gamma = ops.dora_gamma(xw, ad)
+    y = dora_linear(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1).astype(jnp.float32),
+        ad["lora_a"], ad["lora_b"], gamma, interpret=True,
+    )
+    y_ref = ref.dora_linear_ref(
+        x, xw.g_pos, xw.g_neg, xw.scale.reshape(1, -1),
+        ad["lora_a"], ad["lora_b"], gamma,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dora, rram
+from repro.models import layers as L
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(4, 64), k=st.integers(4, 64), seed=st.integers(0, 2 ** 16),
+    scale=st.floats(0.01, 10.0),
+)
+def test_programming_quantization_error_bound(d, k, seed, scale):
+    """|dequant(program(W)) - W| <= scale_col/2 elementwise, always."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d, k)) * scale
+    xw = rram.program(w, rram.RramConfig())
+    err = np.abs(np.asarray(rram.dequantize(xw) - w))
+    bound = np.asarray(xw.scale)[0] * 0.5 + 1e-6
+    assert np.all(err <= bound)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(8, 48), k=st.integers(8, 48), r=st.integers(1, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_dora_init_always_output_preserving(d, k, r, seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d, k)) * 0.2
+    cfg = dora.AdapterConfig(rank=r, kind="dora")
+    ad = dora.init_adapter(jax.random.fold_in(key, 1), d, k, cfg, w_base=w)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (4, d))
+    np.testing.assert_allclose(
+        np.asarray(dora.adapted_forward(x, w, ad, cfg)),
+        np.asarray(x @ w), rtol=2e-4, atol=2e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), drift=st.floats(0.01, 0.3))
+def test_drift_preserves_shape_and_range(seed, drift):
+    cfg = rram.RramConfig(relative_drift=drift)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (16, 16))
+    xw = rram.apply_drift(rram.program(w, cfg), cfg, jax.random.PRNGKey(seed + 1))
+    gp = np.asarray(xw.g_pos)
+    assert gp.shape == (16, 16) and gp.min() >= 0 and gp.max() <= 255
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), s=st.integers(2, 16))
+def test_rope_preserves_pairwise_norms(seed, s):
+    """Rotary embedding is a rotation: per-pair L2 norms are invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, s, 2, 8))
+    pos = jnp.arange(s)[None]
+    y = L.apply_rope(x, pos)
+    x1, x2 = np.split(np.asarray(x), 2, axis=-1)
+    y1, y2 = np.split(np.asarray(y), 2, axis=-1)
+    np.testing.assert_allclose(
+        x1 ** 2 + x2 ** 2, y1 ** 2 + y2 ** 2, rtol=2e-3, atol=2e-3
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_rmsnorm_output_rms_is_unit(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * 3.0
+    p = L.init_rmsnorm(32)
+    y = np.asarray(L.rms_norm(x, p), np.float32)
+    rms = np.sqrt((y ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=2e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16), q=st.integers(1, 8), kv=st.integers(1, 16),
+    w=st.sampled_from([None, 2, 4]),
+)
+def test_causal_mask_properties(seed, q, kv, w):
+    from repro.models.attention import causal_mask
+    if kv < q:
+        kv = q
+    m = np.asarray(causal_mask(q, kv, w))
+    # each query attends to at least its own position
+    assert m.shape == (q, kv)
+    for i in range(q):
+        assert m[i, kv - q + i]  # self
+        assert not m[i, kv - q + i + 1 :].any()  # nothing in the future
+        if w is not None:
+            assert m[i].sum() <= w  # window bound

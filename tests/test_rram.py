@@ -1,0 +1,108 @@
+"""RRAM compact model: programming, drift, MVM, Table I arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rram
+
+
+def test_program_roundtrip_quantization_error():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 32)) * 0.1
+    xw = rram.program(w, rram.RramConfig())
+    w_hat = rram.dequantize(xw)
+    # max error bounded by one code step per column
+    step = np.asarray(xw.scale)[0]
+    err = np.max(np.abs(np.asarray(w_hat - w)), axis=0)
+    assert np.all(err <= step * 0.5 + 1e-7)
+
+
+def test_differential_pair_exclusivity():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (32, 16))
+    xw = rram.program(w, rram.RramConfig())
+    gp, gn = np.asarray(xw.g_pos, np.int32), np.asarray(xw.g_neg, np.int32)
+    # one side of the pair is always zero (standard differential encoding)
+    assert np.all((gp == 0) | (gn == 0))
+
+
+def test_drift_statistics():
+    """Drift is RELATIVE to each cell's target conductance (paper §II-A:
+    |G_drift| < 20% of G_t): per-cell sigma ~ rel * G_t."""
+    cfg = rram.RramConfig(relative_drift=0.10)
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (256, 256))
+    xw = rram.program(w, cfg)
+    xd = rram.apply_drift(xw, cfg, jax.random.PRNGKey(3))
+    gp0 = np.asarray(xw.g_pos, np.float64)
+    gp1 = np.asarray(xd.g_pos, np.float64)
+    interior = (gp0 > 80) & (gp0 < 175)
+    assert interior.sum() > 1000
+    rel = ((gp1 - gp0) / np.maximum(gp0, 1))[interior]
+    assert abs(rel.std() - 0.10) / 0.10 < 0.25
+    # zero-conductance (unformed) cells never drift
+    zeros = gp0 == 0
+    assert np.all(gp1[zeros] == 0)
+
+
+def test_drift_zero_is_identity():
+    cfg = rram.RramConfig(relative_drift=0.0)
+    w = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+    xw = rram.program(w, cfg)
+    xd = rram.apply_drift(xw, cfg, jax.random.PRNGKey(1))
+    assert np.array_equal(np.asarray(xw.g_pos), np.asarray(xd.g_pos))
+
+
+def test_drifted_weights_fused_path_matches_explicit():
+    cfg = rram.RramConfig(relative_drift=0.15)
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (64, 48))
+    k = jax.random.PRNGKey(5)
+    explicit = rram.dequantize(
+        rram.apply_drift(rram.program(w, cfg), cfg, k), jnp.float32
+    )
+    fused = rram.drifted_weights(w, cfg, k, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(explicit), np.asarray(fused))
+
+
+def test_mvm_reference_no_adc_is_matmul():
+    cfg = rram.RramConfig(simulate_adc=False)
+    key = jax.random.PRNGKey(6)
+    w = jax.random.normal(key, (128, 64)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 128))
+    xw = rram.program(w, cfg)
+    np.testing.assert_allclose(
+        np.asarray(rram.mvm_reference(x, xw, cfg)),
+        np.asarray(x @ rram.dequantize(xw)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_mvm_adc_close_to_exact():
+    cfg = rram.RramConfig(simulate_adc=True, adc_bits=8, array_rows=128)
+    key = jax.random.PRNGKey(8)
+    w = jax.random.normal(key, (256, 64)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 256))
+    xw = rram.program(w, cfg)
+    exact = np.asarray(x @ rram.dequantize(xw))
+    adc = np.asarray(rram.mvm_reference(x, xw, cfg))
+    rel = np.abs(adc - exact) / (np.abs(exact).max() + 1e-9)
+    assert rel.max() < 0.05  # 8-bit ADC keeps MVM within a few percent
+
+
+# Table I — must match the paper's arithmetic exactly
+def test_table1_backprop_lifespan():
+    assert rram.lifespan_calibrations(
+        samples=120, epochs=20, batch=1, on_rram=True
+    ) == pytest.approx(41666.67, rel=1e-3)
+
+
+def test_table1_dora_lifespan():
+    assert rram.lifespan_calibrations(
+        samples=10, epochs=20, batch=1, on_rram=False
+    ) == pytest.approx(5e13, rel=1e-6)
+
+
+def test_table1_speedup_1250x():
+    assert rram.calibration_speedup() == pytest.approx(1250.0)

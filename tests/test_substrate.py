@@ -1,0 +1,186 @@
+"""Substrate: checkpoint manager, fault runtime, data pipeline, optimizer,
+gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, global_batch_at_step, shard_batch_at_step
+from repro.optim.adam import AdamW, adamw_init, adamw_update
+from repro.optim import compress
+from repro.runtime.fault import (
+    ElasticPlan, PreemptionGuard, StragglerDetector, StepTimer,
+)
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (4, 3)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.int32)},
+        "lst": [jnp.ones((2,)), jnp.zeros((3,))],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(3, {"adapters": t})
+    out = mgr.restore(3, {"adapters": t})
+    for a, b in zip(
+        jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(out["adapters"])
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"t": _tree(s)})
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async_and_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"t": _tree()}, blocking=False)
+    mgr.save(2, {"t": _tree(1)}, blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [1, 2]
+
+
+def test_checkpoint_no_partial_dirs_on_overwrite(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"t": _tree()})
+    mgr.save(1, {"t": _tree(1)})  # overwrite same step
+    assert mgr.all_steps() == [1]
+    assert not any(d.startswith("tmp.") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_restore_casts_dtype(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = {"w": jnp.ones((3,), jnp.float32)}
+    mgr.save(1, {"p": t})
+    like = {"p": {"w": jnp.ones((3,), jnp.bfloat16)}}
+    out = mgr.restore(1, like)
+    assert out["p"]["w"].dtype == jnp.bfloat16
+
+
+# -- fault runtime -------------------------------------------------------------
+
+
+def test_straggler_detector_flags_outlier():
+    det = StragglerDetector(window=32, min_samples=8)
+    for i in range(20):
+        det.record(i, 0.1 + 0.001 * (i % 3))
+    r = det.record(20, 0.5)  # 5x slower step
+    assert r is not None and r.is_straggler
+    assert det.reports
+
+
+def test_straggler_detector_quiet_on_uniform():
+    det = StragglerDetector(min_samples=8)
+    for i in range(30):
+        r = det.record(i, 0.1)
+    assert not det.reports
+
+
+def test_preemption_guard_flag():
+    with PreemptionGuard(signals=()) as g:
+        assert not g.should_stop
+        g.request_stop()
+        assert g.should_stop
+
+
+def test_elastic_plan():
+    p = ElasticPlan.plan(2, latest_step=40)
+    assert p.new_mesh_shape == (14, 16)
+    assert p.restore_step == 40
+    with pytest.raises(RuntimeError):
+        ElasticPlan.plan(16, latest_step=None)
+
+
+def test_step_timer():
+    with StepTimer() as t:
+        sum(range(1000))
+    assert t.elapsed >= 0
+
+
+# -- data pipeline --------------------------------------------------------------
+
+
+def test_data_deterministic_across_calls():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=4)
+    a = global_batch_at_step(cfg, 5)
+    b = global_batch_at_step(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_shard_slices_match_global():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=8)
+    full = global_batch_at_step(cfg, 3)
+    for shard in range(4):
+        part = shard_batch_at_step(cfg, 3, shard, 4)
+        np.testing.assert_array_equal(
+            part["tokens"], full["tokens"][shard * 2 : (shard + 1) * 2]
+        )
+
+
+def test_data_calibration_set_cycles():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=5, n_calibration_samples=5)
+    a = global_batch_at_step(cfg, 0)
+    b = global_batch_at_step(cfg, 1)  # same 5 samples again
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+# -- optimizer -------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    params = {"x": jnp.array([3.0, -2.0])}
+    opt = AdamW(lr=0.1, grad_clip=None)
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params, opt)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_grad_clip():
+    params = {"x": jnp.array([0.0])}
+    opt = AdamW(lr=1.0, grad_clip=1.0)
+    state = adamw_init(params)
+    g = {"x": jnp.array([1e6])}
+    p2, _ = adamw_update(g, state, params, opt)
+    assert abs(float(p2["x"][0])) < 10.0
+
+
+def test_compress_error_feedback_reduces_bias():
+    """With error feedback the accumulated quantization error stays bounded
+    and the mean dequantized gradient converges to the true gradient."""
+    g = {"w": jnp.linspace(-1, 1, 64)}
+    residual = compress.init_residual(g)
+    total = jnp.zeros((64,))
+    n = 50
+    for _ in range(n):
+        codes, scales, residual = compress.compress(g, residual)
+        total = total + codes["w"].astype(jnp.float32) * scales["w"]
+    mean = np.asarray(total / n)
+    np.testing.assert_allclose(mean, np.asarray(g["w"]), atol=2e-3)
+
+
+def test_compress_int8_range():
+    g = {"w": jnp.array([1e-3, -5.0, 7.0])}
+    codes, scales, _ = compress.compress(g, compress.init_residual(g))
+    assert codes["w"].dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(codes["w"]))) <= 127
