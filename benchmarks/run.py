@@ -19,11 +19,12 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import paper_tables, kernels_bench
+    from benchmarks import backends_bench, paper_tables, kernels_bench
 
     benches = {}
     benches.update(paper_tables.ALL)
     benches.update(kernels_bench.ALL)
+    benches.update(backends_bench.ALL)
     if args.only:
         keep = args.only.split(",")
         benches = {k: v for k, v in benches.items() if k in keep}

@@ -56,13 +56,28 @@ def program_model(
     base: Pytree,
     cfg: RramConfig,
     key: jax.Array,
+    *,
+    mode: str = "dequant",
 ) -> Pytree:
     """Program + drift every RRAM-resident leaf; returns the student base.
 
     Deterministic: each leaf's drift key is ``fold_in(key, hash(path))`` so
     re-programming with the same key reproduces the same deployment state
     (this is what makes on-restart recovery exact — see runtime/fault.py).
+
+    ``mode`` selects the substrate representation of the returned tree:
+
+    * ``"dequant"`` — drifted weights read back to the leaf's float dtype
+      (today's training/CPU fast path).
+    * ``"codes"`` — each RRAM leaf becomes a resident ``CrossbarWeight``
+      (uint8 ``(G+, G-, scale)``), including the stacked expert /
+      scan-group shapes. The SAME programming event: codes are bitwise
+      identical across modes for identical keys, so backend parity holds
+      to programming-quantization tolerance (the dequant path merely
+      rounds the read-back to the float dtype).
     """
+    if mode not in ("dequant", "codes"):
+        raise ValueError(f"mode must be 'dequant' or 'codes', got {mode!r}")
 
     def leaf(path, x):
         if not _is_rram_leaf(path):
@@ -72,12 +87,23 @@ def program_model(
         h = jnp.uint32(zlib.crc32(_path_str(path).encode()))
         k = jax.random.fold_in(key, h)
         if x.ndim == 2:
+            if mode == "codes":
+                return rram.programmed_codes(x, cfg, k)
             return rram.drifted_weights(x, cfg, k, dtype=x.dtype)
         # stacked weights: (E, d, k) experts or (G, ..., d, k) scan bodies —
         # program each matrix; drift is i.i.d. so one vmapped call suffices.
         lead = x.shape[:-2]
         flat = x.reshape((-1,) + x.shape[-2:])
         keys = jax.random.split(k, flat.shape[0])
+        if mode == "codes":
+            out = jax.vmap(lambda w, kk: rram.programmed_codes(w, cfg, kk))(
+                flat, keys
+            )
+            return rram.CrossbarWeight(
+                g_pos=out.g_pos.reshape(lead + x.shape[-2:]),
+                g_neg=out.g_neg.reshape(lead + x.shape[-2:]),
+                scale=out.scale.reshape(lead + (1, x.shape[-1])),
+            )
         out = jax.vmap(
             lambda w, kk: rram.drifted_weights(w, cfg, kk, dtype=x.dtype)
         )(flat, keys)
@@ -87,16 +113,26 @@ def program_model(
 
 
 def rram_bytes(base: Pytree) -> int:
-    """Bytes of weights resident in RRAM (differential uint8 pairs)."""
+    """Bytes of weights resident in RRAM.
+
+    For a codes-mode tree this is a real MEASUREMENT: the summed byte
+    size of the uint8 code arrays actually resident in device memory.
+    For a dequant-mode (float) tree it remains the 2-bytes-per-weight
+    estimate of what the array WOULD hold (differential uint8 pairs).
+    """
     total = 0
 
     def leaf(path, x):
         nonlocal total
-        if _is_rram_leaf(path):
-            total += 2 * x.size  # G+ and G- codes, 1 byte each
+        if isinstance(x, rram.CrossbarWeight):
+            total += int(x.g_pos.size) + int(x.g_neg.size)
+        elif _is_rram_leaf(path):
+            total += 2 * int(x.size)  # G+ and G- codes, 1 byte each
         return x
 
-    jax.tree_util.tree_map_with_path(leaf, base)
+    jax.tree_util.tree_map_with_path(
+        leaf, base, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )
     return total
 
 
@@ -116,6 +152,11 @@ def merge_adapters_for_serve(base: Pytree, adapters: Pytree) -> Pytree:
             if "dora_m" not in a:
                 return a  # LoRA: nothing to merge
             w = b["w"] if isinstance(b, dict) and "w" in b else b
+            if isinstance(w, rram.CrossbarWeight):
+                # codes-resident base: the norm is a one-off digital
+                # read-back at deployment; the resulting gamma is exactly
+                # what the fused kernel's epilogue consumes.
+                w = rram.dequantize(w)
             m = a["dora_m"].astype(jnp.float32)
             # disambiguate by lora_b rank: (r,k) plain/conv; (E,r,k)
             # stacked (experts OR scan groups — same math); (G,E,r,k)

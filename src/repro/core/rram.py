@@ -190,9 +190,23 @@ def drifted_weights(
     dtype=jnp.bfloat16,
 ) -> jax.Array:
     """W -> program -> drift -> dequantize, fused; returns drifted weights."""
-    xw = program(w, cfg)
-    xw = apply_drift(xw, cfg, key)
-    return dequantize(xw, dtype=dtype)
+    return dequantize(programmed_codes(w, cfg, key), dtype=dtype)
+
+
+def programmed_codes(
+    w: jax.Array,
+    cfg: RramConfig,
+    key: jax.Array,
+) -> CrossbarWeight:
+    """W -> program -> drift, KEEPING the uint8 codes resident.
+
+    This is the substrate's ``codes`` representation: the same programming
+    event as ``drifted_weights`` (identical codes for identical keys — the
+    backend-parity contract), but the array stays in code space so the
+    execution backends (``repro/substrate``) can read it without ever
+    materializing a float weight in HBM.
+    """
+    return apply_drift(program(w, cfg), cfg, key)
 
 
 # ---------------------------------------------------------------------------

@@ -144,7 +144,7 @@ def _compile_once(arch, cfg, shape, mesh, *, smoke=False):
     """Lower + compile one variant; returns (compiled, params_abs)."""
     dp = mesh_lib.dp_axes(mesh)
     tp = mesh_lib.tp_axis(mesh)
-    with jax.set_mesh(mesh), sh.logical_axes(dp, tp):
+    with mesh_lib.mesh_context(mesh), sh.logical_axes(dp, tp):
         fn, args_abs, in_sh, out_sh, params_abs = build_step(
             arch, shape, mesh, smoke=smoke, cfg_override=cfg
         )
@@ -156,6 +156,10 @@ def _compile_once(arch, cfg, shape, mesh, *, smoke=False):
 
 def _extract(compiled) -> Dict:
     cost = compiled.cost_analysis()
+    # jax 0.4.x returns a one-element list of per-program dicts; >=0.5
+    # returns the dict directly.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         peak = getattr(mem, "peak_memory_in_bytes", None)

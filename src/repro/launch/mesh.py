@@ -12,6 +12,16 @@ from typing import Tuple
 import jax
 
 
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    where it exists (>= 0.6), else the legacy ``Mesh`` context manager
+    (0.4.x global mesh) — both make the mesh visible to
+    ``with_sharding_constraint`` / shard_hint inside jitted bodies."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e production mesh: one pod = 16x16 = 256 chips, axes
     ("data", "model"); the multi-pod mesh adds a leading "pod" axis over

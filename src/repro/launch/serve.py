@@ -6,13 +6,21 @@ in SRAM. ``merge_magnitude`` (Algorithm 2 line 12) folds the DoRA column
 norms once at load time so each decode matmul pays only the low-rank
 epilogue.
 
+The ``--backend`` flag selects the substrate execution backend
+(repro/substrate): ``dequant`` (float read-back fast path, the default),
+``codes`` (uint8 codes resident in HBM, fused Pallas kernel) or
+``codes_adc`` (ADC-faithful fidelity path). Under ``codes``/``codes_adc``
+the reported ``rram_bytes`` is a measurement of the resident code arrays,
+not an estimate.
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --batch 4 --prompt-len 16 --gen 8
+        --batch 4 --prompt-len 16 --gen 8 [--backend codes]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import Dict, Optional, Tuple
 
@@ -20,21 +28,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import substrate
 from repro.configs import get_arch
-from repro.core.calibrate import program_model
+from repro.core.calibrate import program_model, rram_bytes
 from repro.models import transformer as T
 
+BACKENDS = ("dequant", "codes", "codes_adc")
 
-def load_student(cfg, seed: int = 0, adapters=None) -> Dict:
+
+def load_student(cfg, seed: int = 0, adapters=None, *, backend: str = "dequant") -> Dict:
     """Init a teacher, program it onto RRAM, attach (given or fresh)
     adapters with the DoRA magnitudes merged for serving (Algorithm 2
-    line 12 — no per-step norm recompute; §Perf H-6)."""
+    line 12 — no per-step norm recompute; §Perf H-6).
+
+    ``backend='dequant'`` programs the deployment as drifted floats
+    (today's fast path); ``'codes'``/``'codes_adc'`` keep the uint8
+    conductance codes resident (same programming event, same keys)."""
     from repro.core.calibrate import merge_adapters_for_serve
 
+    mode = "dequant" if backend == "dequant" else "codes"
     params = T.init_params(jax.random.PRNGKey(seed), cfg)
-    student = program_model(params["base"], cfg.rram, jax.random.PRNGKey(seed + 1))
+    student = program_model(
+        params["base"], cfg.rram, jax.random.PRNGKey(seed + 1), mode=mode
+    )
     merged = merge_adapters_for_serve(student, adapters or params["adapters"])
     return {"base": student, "adapters": merged}
+
+
+def backend_scope(backend: str, cfg=None):
+    """Context manager binding the substrate backend for trace time.
+    Passing the model config plumbs its RramConfig into the ADC-faithful
+    backend (code_max/adc_bits must match the programmed deployment)."""
+    if backend == "dequant":
+        return contextlib.nullcontext()
+    if backend == "codes_adc" and cfg is not None:
+        return substrate.use_backend(
+            backend, code_max=cfg.rram.code_max, adc_bits=cfg.rram.adc_bits
+        )
+    return substrate.use_backend(backend)
 
 
 def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
@@ -90,10 +121,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--backend", default="dequant", choices=BACKENDS,
+        help="substrate execution backend (see repro/substrate)",
+    )
     args = ap.parse_args()
     arch = get_arch(args.arch)
     cfg = arch.smoke if args.smoke else arch.full
-    params = load_student(cfg, args.seed)
+    params = load_student(cfg, args.seed, backend=args.backend)
+    kind = "measured resident" if args.backend != "dequant" else "estimated"
+    print(f"rram_bytes: {rram_bytes(params['base'])} ({kind})")
     key = jax.random.PRNGKey(args.seed)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     enc = None
@@ -101,9 +138,11 @@ def main():
         enc = jax.random.normal(
             key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16
         )
-    toks, dt = generate(params, prompt, cfg, gen_len=args.gen, enc_embeds=enc)
+    with backend_scope(args.backend, cfg):
+        toks, dt = generate(params, prompt, cfg, gen_len=args.gen, enc_embeds=enc)
     tps = args.batch * args.gen / dt
-    print(f"generated {toks.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
+    print(f"backend={args.backend} generated {toks.shape} in {dt:.2f}s "
+          f"({tps:.1f} tok/s)")
     print(toks[:2])
 
 

@@ -35,9 +35,12 @@ from repro.runtime.fault import PreemptionGuard, StepTimer, StragglerDetector
 from repro.sharding import rules as sh
 
 
-def build_state(cfg, seed: int = 0) -> CalibState:
+def build_state(cfg, seed: int = 0, *, substrate_mode: str = "dequant") -> CalibState:
     params = T.init_params(jax.random.PRNGKey(seed), cfg)
-    student = program_model(params["base"], cfg.rram, jax.random.PRNGKey(seed + 1))
+    student = program_model(
+        params["base"], cfg.rram, jax.random.PRNGKey(seed + 1),
+        mode=substrate_mode,
+    )
     opt_state = adamw_init(params["adapters"])
     return CalibState(
         params["base"], student, params["adapters"], opt_state,
@@ -74,6 +77,13 @@ def train(
     # Cache teacher features once per distinct calibration batch
     # (Algorithm 1 line 3; §Perf H-9: -29% FLOPs, -17% bytes per step).
     cached_teacher: bool = False,
+    # Substrate representation of the programmed student: "dequant"
+    # (drifted floats, today's fast path) or "codes" (resident uint8
+    # CrossbarWeight leaves). Calibration always EXECUTES codes via the
+    # differentiable 'dequant' backend — gradients flow to the adapters
+    # while the codes stay frozen; serving can then flip the same
+    # deployment to the fused 'codes' backend.
+    backend: str = "dequant",
 ) -> Dict:
     arch = get_arch(arch_name)
     cfg = arch.smoke if smoke else arch.full
@@ -93,7 +103,8 @@ def train(
         mesh = mesh_lib.make_production_mesh(multi_pod=use_mesh == "multi")
         dp, tp = mesh_lib.dp_axes(mesh), mesh_lib.tp_axis(mesh)
 
-    state = build_state(cfg, seed)
+    substrate_mode = "dequant" if backend == "dequant" else "codes"
+    state = build_state(cfg, seed, substrate_mode=substrate_mode)
     manager = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
     start_step = 0
     if manager and resume and manager.latest_step() is not None:
@@ -109,13 +120,21 @@ def train(
         )
         print(f"resumed from step {start_step}")
 
+    import contextlib
+
     if mesh is not None:
-        ctx = jax.set_mesh(mesh)
+        ctx = mesh_lib.mesh_context(mesh)
         hint_ctx = sh.logical_axes(dp, tp)
     else:
-        import contextlib
         ctx = contextlib.nullcontext()
         hint_ctx = contextlib.nullcontext()
+    # codes-resident student: execute through the differentiable dequant
+    # backend (the fused kernel is inference-shaped; AD needs the jnp path).
+    if substrate_mode == "codes":
+        from repro import substrate
+        backend_ctx = substrate.use_backend("dequant")
+    else:
+        backend_ctx = contextlib.nullcontext()
 
     # NOTE: no donation — teacher and student share digital-peripheral
     # buffers (norms/embeddings pass through program_model unchanged), and
@@ -124,7 +143,7 @@ def train(
     detector = StragglerDetector()
     history = []
     feats_cache = {}
-    with ctx, hint_ctx, PreemptionGuard() as guard:
+    with ctx, hint_ctx, backend_ctx, PreemptionGuard() as guard:
         for step in range(start_step, steps):
             np_batch = global_batch_at_step(dcfg, step)
             batch_dev = {
@@ -188,11 +207,16 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--backend", default="dequant", choices=["dequant", "codes"],
+        help="substrate representation of the programmed student",
+    )
     args = ap.parse_args()
     out = train(
         args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, use_mesh=args.mesh, seed=args.seed,
+        backend=args.backend,
     )
     print(f"final loss: {out['final_loss']:.6f}")
 

@@ -12,7 +12,11 @@ Covers the assigned-architecture needs:
     shapes); sliding-window layers keep a rolling window cache.
 
 All projections are RimcLinear (frozen drifted base + DoRA side-car) — the
-paper's technique applies uniformly; see DESIGN.md §4.
+paper's technique applies uniformly. Every projection goes through
+``layers.linear``, so a codes-resident deployment
+(``program_model(mode="codes")``) runs q/k/v/o, the MLA latent
+projections, and cross-attention on the substrate's execution backends
+(repro/substrate) with no changes here — README.md ARCHITECTURE.
 """
 from __future__ import annotations
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import dora
 from repro.core.dora import AdapterConfig
+from repro.core.rram import CrossbarWeight
 
 Pytree = Any
 
@@ -52,12 +53,26 @@ def linear(
     base: Dict,
     adapter: Optional[Dict],
     acfg: AdapterConfig,
+    *,
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Apply a RimcLinear. ``adapter=None`` or ``{}`` -> plain base matmul
-    (teacher path / pure-RRAM student)."""
+    (teacher path / pure-RRAM student).
+
+    This is the single choke point every matmul in the model zoo goes
+    through: when the base leaf is a resident ``CrossbarWeight``
+    (``program_model(mode="codes")``), the call dispatches to the
+    substrate's execution backends (codes / codes_adc / dequant —
+    ``repro/substrate``); float leaves keep the plain jnp path.
+    """
+    w = base["w"]
+    if isinstance(w, CrossbarWeight):
+        from repro.substrate import crossbar_linear
+
+        return crossbar_linear(x, w, adapter, acfg, backend=backend)
     if adapter:
-        return dora.adapted_forward(x, base["w"], adapter, acfg)
-    return x @ base["w"].astype(x.dtype)
+        return dora.adapted_forward(x, w, adapter, acfg)
+    return x @ w.astype(x.dtype)
 
 
 def init_kernel_linear(*args, **kwargs):  # alias used by kernels/ops tests

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core import dora
 from repro.core.dora import AdapterConfig
+from repro.core.rram import CrossbarWeight, dequantize
 from repro.models import layers as L
 from repro.sharding.rules import shard_hint
 
@@ -96,10 +97,16 @@ def _stacked_adapter(key, n_experts, d, k, acfg: AdapterConfig, w_stack):
 
 def _expert_matmul(
     x: jax.Array,  # (B, E, C, d_in)
-    w: jax.Array,  # (E, d_in, d_out)
+    w: jax.Array,  # (E, d_in, d_out) float — or a stacked CrossbarWeight
     adapter: Optional[Dict],
     acfg: AdapterConfig,
 ) -> jax.Array:
+    if isinstance(w, CrossbarWeight):
+        # codes-resident expert stack: HBM holds the uint8 (G+, G-) pairs;
+        # the differential dequant happens on the fly inside this call
+        # (XLA fuses it into the einsum — the stacked-expert analogue of
+        # the fused kernel's in-register dequant).
+        w = dequantize(w, dtype=x.dtype)
     y = jnp.einsum("becd,edf->becf", x, w.astype(x.dtype))
     if not adapter:
         return y
@@ -119,6 +126,8 @@ def _expert_matmul(
 
 
 def _stacked_column_norm(w, a, b, eps=1e-6):
+    if isinstance(w, CrossbarWeight):
+        w = dequantize(w)
     wf = w.astype(jnp.float32)
     af = a.astype(jnp.float32)
     bf = b.astype(jnp.float32)

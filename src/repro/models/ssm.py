@@ -80,14 +80,23 @@ def init_ssm(
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
-    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    """Depthwise causal conv over (B, S, C) with kernel (K, C).
+
+    Accumulates in f32 and rounds once to ``x.dtype`` — the decode paths
+    (ssm_decode / rglru_decode) compute this window in f32, so a bf16
+    accumulation here would make prefill and decode diverge by an extra
+    rounding per tap (the recurrent gates amplify that across the
+    sequence; tests/test_models.py::test_decode_matches_forward).
+    """
     k = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
     # windowed sum: sum_j w[j] * x[t - (K-1) + j]
-    out = jnp.zeros_like(x)
+    out = jnp.zeros(x.shape, jnp.float32)
     for j in range(k):
-        out = out + xp[:, j : j + x.shape[1], :] * w[j][None, None, :].astype(x.dtype)
-    return out + b[None, None, :].astype(x.dtype)
+        out = out + xp[:, j : j + x.shape[1], :] * w[j][None, None, :].astype(
+            jnp.float32
+        )
+    return (out + b[None, None, :].astype(jnp.float32)).astype(x.dtype)
 
 
 def _ssm_params(x: jax.Array, base, a, cfg: SsmConfig, acfg):

@@ -661,11 +661,22 @@ def decode_step(
 
 
 def count_params(params: Dict) -> Tuple[int, int]:
-    """(base_params, adapter_params)."""
+    """(base_params, adapter_params). A codes-resident ``CrossbarWeight``
+    counts its LOGICAL weight count once (g_pos/g_neg are two physical
+    devices per weight, not two weights)."""
+    from repro.core.rram import CrossbarWeight
+
     def size(tree):
-        return sum(
-            x.size for x in jax.tree_util.tree_leaves(tree) if hasattr(x, "size")
-        )
+        total = 0
+        for x in jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda n: isinstance(n, CrossbarWeight)
+        ):
+            if isinstance(x, CrossbarWeight):
+                total += x.g_pos.size
+            elif hasattr(x, "size"):
+                total += x.size
+        return total
+
     return size(params["base"]), size(params["adapters"])
 
 
@@ -689,11 +700,18 @@ def active_param_fraction(cfg: ModelConfig, params: Dict) -> float:
 
 
 def _tree_key_size(tree, key) -> int:
+    from repro.core.rram import CrossbarWeight
+
     total = 0
     if isinstance(tree, dict):
         for k, v in tree.items():
             if k == key:
-                total += sum(x.size for x in jax.tree_util.tree_leaves(v))
+                if isinstance(v, CrossbarWeight):
+                    total += v.g_pos.size
+                else:
+                    total += sum(
+                        x.size for x in jax.tree_util.tree_leaves(v)
+                    )
             else:
                 total += _tree_key_size(v, key)
     elif isinstance(tree, list):

@@ -122,8 +122,17 @@ def _fit(axis, dim):
 
 
 def _ambient_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    return None if m is None or m.empty else m
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
+        return None if m is None or m.empty else m
+    try:  # jax 0.4.x: legacy global mesh set by the Mesh context manager
+        from jax.interpreters import pxla
+
+        m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
 
 
 def _as_tuple(a):

@@ -1,0 +1,30 @@
+"""Unified crossbar substrate: one resident weight format, many
+execution backends.
+
+``CrossbarWeight`` (uint8 differential conductance codes + per-column
+scale, ``core/rram.py``) is the substrate's resident weight format for
+the *entire* model zoo — ``calibrate.program_model(mode="codes")``
+returns it for every RRAM leaf (including stacked expert / scan-group
+shapes), and every matmul dispatches through
+``models/layers.py::linear`` to one of the registered backends here.
+
+See ``substrate/backends.py`` for the backend contract and README.md
+(ARCHITECTURE) for when each backend is selected.
+"""
+from repro.core.rram import CrossbarWeight, dequantize, program  # noqa: F401
+from repro.substrate.backends import (  # noqa: F401
+    Backend,
+    DEFAULT_BACKEND,
+    active_backend_name,
+    available_backends,
+    crossbar_linear,
+    get_backend,
+    register_backend,
+    use_backend,
+)
+from repro.substrate.exec import (  # noqa: F401
+    default_interpret,
+    dora_gamma,
+    rimc_linear,
+    rimc_mvm_adc,
+)

@@ -1,0 +1,104 @@
+"""Jit'd execution wrappers around the Pallas kernels (absorbed from
+``kernels/ops.py``; that module re-exports these names for
+backward compatibility).
+
+``rimc_linear`` is the deployment-path op: it takes a CrossbarWeight (the
+programmed+drifted RRAM array), the DoRA adapter, and the merged column
+norms, pads everything to MXU-aligned tiles, and dispatches the fused
+kernel. On a CPU host ``interpret=True`` executes the kernel body with
+jnp semantics; on TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dora as dora_lib
+from repro.core.rram import CrossbarWeight, dequantize
+from repro.kernels.dora_linear import dora_linear
+from repro.kernels.crossbar_mvm import crossbar_mvm
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def dora_gamma(xw: CrossbarWeight, adapter: dict) -> jax.Array:
+    """Merged DoRA scale M/||W_r + A@B|| (Algorithm 2 line 12), shape (1,N)."""
+    w = dequantize(xw)
+    norm = dora_lib.column_norm(w, adapter["lora_a"], adapter["lora_b"])
+    m = adapter["dora_m"].astype(jnp.float32)
+    return (m / norm)[None, :]
+
+
+def rimc_linear(
+    x: jax.Array,
+    xw: CrossbarWeight,
+    adapter: dict,
+    gamma: Optional[jax.Array] = None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Y = gamma * (X W_r + (XA)B) with automatic tile padding.
+    x: (..., K) — leading dims flattened to M."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = xw.g_pos.shape[-1]
+    r = adapter["lora_a"].shape[-1]
+    if gamma is None:
+        gamma = dora_gamma(xw, adapter)
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+    xf = _pad_to(_pad_to(xf, bm, 0), bk, 1)
+    gp = _pad_to(_pad_to(xw.g_pos, bk, 0), bn, 1)
+    gn = _pad_to(_pad_to(xw.g_neg, bk, 0), bn, 1)
+    scale = _pad_to(xw.scale.reshape(1, -1).astype(jnp.float32), bn, 1)
+    a = _pad_to(adapter["lora_a"].astype(jnp.float32), bk, 0)
+    b = _pad_to(adapter["lora_b"].astype(jnp.float32), bn, 1)
+    g = _pad_to(gamma.astype(jnp.float32), bn, 1)
+    y = dora_linear(
+        xf, gp, gn, scale, a, b, g, bm=bm, bn=bn, bk=bk, interpret=interpret
+    )
+    return y[:m, :n].reshape(lead + (n,)).astype(x.dtype)
+
+
+def rimc_mvm_adc(
+    x: jax.Array,
+    xw: CrossbarWeight,
+    *,
+    code_max: int = 255,
+    adc_bits: int = 8,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """ADC-faithful crossbar MVM (no adapter): analog fidelity studies."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = xw.g_pos.shape[-1]
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+    xf = _pad_to(_pad_to(xf, bm, 0), 256, 1)
+    gp = _pad_to(_pad_to(xw.g_pos, 256, 0), bn, 1)
+    gn = _pad_to(_pad_to(xw.g_neg, 256, 0), bn, 1)
+    scale = _pad_to(xw.scale.reshape(1, -1).astype(jnp.float32), bn, 1)
+    y = crossbar_mvm(
+        xf, gp, gn, scale, code_max=code_max, adc_bits=adc_bits,
+        bm=bm, bn=bn, interpret=interpret,
+    )
+    return y[:m, :n].reshape(lead + (n,)).astype(x.dtype)

@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev dependency (requirements-dev.txt); suite degrades to skip",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dora, rram
 from repro.kernels import ops, ref

@@ -2,7 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev dependency (requirements-dev.txt); suite degrades to skip",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dora, rram
 from repro.models import layers as L

@@ -2,6 +2,11 @@
 based DoRA calibration restores (the paper's headline mechanism)."""
 import dataclasses
 
+import pytest as _pytest
+
+# teacher-training fixture + calibration loops: fast lane skips these
+pytestmark = _pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 import numpy as np
