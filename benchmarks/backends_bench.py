@@ -1,28 +1,27 @@
 """Substrate backend comparison: serving throughput + resident memory.
 
-Drives ``launch/serve.py``'s generate loop on one smoke arch per backend
-(dequant float fast path vs resident uint8 codes vs ADC-faithful codes)
-and reports tok/s plus the rram_bytes accounting. On this CPU container
-the Pallas kernels run in interpret mode, so codes-backend wall-times are
-NOT TPU-representative — the derived column carries the number that
-matters on TPU: resident HBM bytes per weight (codes keep 2 B/weight of
-uint8 and never materialize a float W_r).
+Drives the deployment lifecycle API (``repro.deploy.Deployment``) on one
+smoke arch per backend (dequant float fast path vs resident uint8 codes
+vs ADC-faithful codes) and reports tok/s plus the rram/sram byte
+accounting. On this CPU container the Pallas kernels run in interpret
+mode, so codes-backend wall-times are NOT TPU-representative — the
+derived column carries the numbers that matter on TPU: resident HBM
+bytes per weight (codes keep 2 B/weight of uint8 and never materialize a
+float W_r) and the SRAM side-car footprint the calibration trains
+(paper's ~2.3% params headline).
 """
 from __future__ import annotations
 
 from typing import List, Tuple
 
 import jax
-import jax.numpy as jnp
 
 Row = Tuple[str, float, str]
 
 
 def backends_bench(quick=True) -> List[Row]:
     from repro.configs import get_arch
-    from repro.core.calibrate import rram_bytes
-    from repro.launch import serve
-    from repro.models import transformer as T
+    from repro.deploy import Deployment
 
     arch = "qwen3_1_7b"
     cfg = get_arch(arch).smoke
@@ -35,19 +34,19 @@ def backends_bench(quick=True) -> List[Row]:
         "dequant", "codes", "codes_adc"
     )
     for backend in backends:
-        params = serve.load_student(cfg, seed=0, backend=backend)
-        with serve.backend_scope(backend, cfg):
-            _, dt = serve.generate(params, prompt, cfg, gen_len=gen)
+        dep = Deployment.program(cfg, 0, backend=backend)
+        session = dep.serve()
+        _, dt = session.generate(prompt, gen_len=gen)
         tps = batch * gen / dt
-        resident = rram_bytes(params["base"])
-        n_base, _ = T.count_params(params)
+        resident = dep.rram_bytes()
         kind = "measured" if backend != "dequant" else "estimated"
         rows.append(
             (
                 f"substrate/{arch}_serve_{backend}_toks_per_s",
                 tps,
                 f"rram_bytes={resident} ({kind}); "
-                f"{resident / max(n_base, 1):.2f} B/weight resident",
+                f"sram_bytes={dep.sram_bytes()} "
+                f"({dep.calibrated_fraction():.2%} params calibrated)",
             )
         )
     return rows

@@ -1,17 +1,18 @@
 """Paper-faithful experiment at example scale: ResNet + drift + DoRA
-feature calibration vs LoRA vs backprop (Fig. 4/6 protocol).
+feature calibration vs LoRA vs backprop (Fig. 4/6 protocol), through the
+deployment API's CNN-lifecycle entry (``repro.deploy.resnet_cell``).
 
 Run:  PYTHONPATH=src python examples/calibrate_resnet.py
 """
-from repro.core.repro_experiments import run_cell
+from repro.deploy import resnet_cell
 
 
 def main():
     print("running 3 calibration methods at drift=0.20, 10 samples "
           "(ResNet-8 proxy, procedural data)...")
     for method in ("dora", "lora", "backprop"):
-        r = run_cell(method=method, rank=2, drift=0.20, samples=10,
-                     calib_epochs=10)
+        r = resnet_cell(method=method, rank=2, drift=0.20, samples=10,
+                        calib_epochs=10)
         print(
             f"{method:9s} teacher={r.teacher_acc:.3f} "
             f"drifted={r.drifted_acc:.3f} calibrated={r.calibrated_acc:.3f} "

@@ -1,61 +1,64 @@
-"""Quickstart: the paper's mechanism end-to-end in ~60 lines.
+"""Quickstart: the paper's mechanism as a device lifetime, in one object.
 
-1. Build a small LM ("teacher", trained weights stand-in).
-2. Deploy it onto the simulated RRAM crossbar -> conductance drift
-   degrades it (teacher/student disagreement).
-3. Calibrate with feature-based DoRA (Algorithm 1+2): only the SRAM
-   side-cars train; the RRAM array is never written.
-4. Serve with the calibrated student.
+The whole story is a timeline — program RRAM once, let conductance drift
+in the field, restore accuracy with SRAM-resident DoRA side-cars, never
+rewrite the array. ``repro.deploy.Deployment`` expresses it directly:
+
+1. ``Deployment.program``  — deploy a small LM onto the simulated
+   crossbar (programming event; the array is now FIXED).
+2. ``dep.advance(hours)``  — the drift clock: field time passes,
+   conductances relax, accuracy degrades.
+3. ``dep.calibrate``       — feature-based DoRA (Algorithm 1+2): only
+   the SRAM side-cars train; zero RRAM writes.
+4. ``dep.serve``           — serve the calibrated student (DoRA
+   magnitudes merged, Algorithm 2 line 12).
+
+...and because drift keeps happening, steps 2-3 repeat forever on the
+same deployment — that loop is the paper's lifetime claim.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core.calibrate import CalibState, make_calib_step, program_model
-from repro.models import transformer as T
-from repro.optim.adam import AdamW, adamw_init
+from repro.deploy import Deployment
 
 
 def main():
-    arch = get_arch("qwen3-1.7b")
-    cfg = arch.smoke  # reduced same-family config (CPU-friendly)
-    key = jax.random.PRNGKey(0)
+    cfg = get_arch("qwen3-1.7b").smoke  # reduced same-family config (CPU)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(0), (4, 32), 0, cfg.vocab
+    )}
 
-    # 1. teacher ("DNN trained on GPU")
-    params = T.init_params(key, cfg)
+    # 1. programming event: teacher trained elsewhere, deployed onto RRAM
+    dep = Deployment.program(cfg, key=0)
+    gap0 = dep.logit_mse(batch, use_adapters=False)
+    print(f"teacher/student logit MSE after programming: {gap0:.5f}")
 
-    # 2. deployment: program + drift (the RRAM array is now FIXED)
-    student_base = program_model(params["base"], cfg.rram, jax.random.PRNGKey(1))
+    # 2. a day in the field: conductance relaxation, no reprogramming
+    dep.advance(hours=24)
+    gap1 = dep.logit_mse(batch, use_adapters=False)
+    print(f"after 24h of drift:                          {gap1:.5f}")
 
-    batch = {"tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab)}
-    t_logits = T.forward(params, batch, cfg, use_adapters=False)
-    s_logits = T.forward(
-        {"base": student_base, "adapters": {}}, batch, cfg, use_adapters=False
-    )
-    gap = float(jnp.mean((t_logits - s_logits).astype(jnp.float32) ** 2))
-    print(f"teacher/student logit MSE after drift: {gap:.5f}")
+    # 3. calibration: ONLY the SRAM side-cars train (~2-3% of params)
+    report = dep.calibrate(batch, steps=20, lr=3e-3)
+    print(report.summary())
+    gap2 = dep.logit_mse(batch)
+    print(f"after calibration:                           {gap2:.5f} "
+          f"({100 * (1 - gap2 / gap1):.1f}% of the drift gap recovered, "
+          "zero RRAM writes)")
 
-    # 3. calibration: ONLY adapters train (2-3% of params, zero RRAM writes)
-    state = CalibState(
-        params["base"], student_base, params["adapters"],
-        adamw_init(params["adapters"]), jnp.zeros((), jnp.int32),
-    )
-    step = jax.jit(make_calib_step(cfg, AdamW(lr=3e-3)))
-    for i in range(20):
-        state, metrics = step(state, batch)
-        if i % 5 == 0:
-            print(f"  calib step {i:3d}  feature MSE {float(metrics['loss']):.6f}")
+    # 4. serve the calibrated deployment
+    session = dep.serve()
+    print(session.describe())
+    toks, dt = session.generate(batch["tokens"][:, :8], gen_len=8)
+    print(f"served {toks.shape} in {dt:.2f}s; first row: {toks[0].tolist()}")
 
-    # 4. calibrated student
-    c_logits = T.forward(
-        {"base": state.student_base, "adapters": state.adapters}, batch, cfg
-    )
-    gap2 = float(jnp.mean((t_logits - c_logits).astype(jnp.float32) ** 2))
-    print(f"teacher/student logit MSE after calibration: {gap2:.5f}")
-    print(f"recovered {100 * (1 - gap2 / gap):.1f}% of the drift gap, "
-          "with zero RRAM writes")
+    # ...time keeps passing: drift again, recalibrate again — same array
+    dep.advance(hours=168)
+    report2 = dep.calibrate(batch, steps=20, lr=3e-3)
+    print(f"one week later, recalibrated: feature MSE "
+          f"{report2.initial_loss:.6f} -> {report2.final_loss:.6f}")
 
 
 if __name__ == "__main__":

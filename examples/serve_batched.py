@@ -1,29 +1,30 @@
-"""Batched serving example: calibrate, merge DoRA magnitudes, then serve
-batched requests with prefill + decode against the KV cache.
+"""Batched serving example: program a deployment, calibrate it, then
+serve batched requests (prefill + decode against the KV cache) with
+temperature sampling — every stage through ``repro.deploy.Deployment``.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.launch import serve, train
+from repro.deploy import Deployment
 
 
 def main():
-    arch = get_arch("qwen3-1.7b")
-    cfg = arch.smoke
-    # quick calibration so the served model is the paper's artifact
-    out = train.train("qwen3-1.7b", smoke=True, steps=15, batch=4, seq=32,
-                      lr=3e-3, log_every=5)
-    state = out["state"]
-    params = {"base": state.student_base, "adapters": state.adapters}
+    cfg = get_arch("qwen3-1.7b").smoke
+    # program + quick calibration so the served model is the paper's artifact
+    dep = Deployment.program(cfg, key=0)
+    dep.advance(hours=24)
+    report = dep.calibrate(4, steps=15, lr=3e-3, seq_len=32)
+    print(report.summary())
 
+    session = dep.serve()
+    print(session.describe())
     key = jax.random.PRNGKey(0)
-    # 8 concurrent requests, batch-decoded
+    # 8 concurrent requests, batch-decoded; temperature sampling applies
+    # from the FIRST generated token
     prompts = jax.random.randint(key, (8, 12), 0, cfg.vocab)
-    toks, dt = serve.generate(params, prompts, cfg, gen_len=16,
-                              temperature=0.8, key=key)
+    toks, dt = session.generate(prompts, gen_len=16, temperature=0.8, key=key)
     print(f"served 8 requests x 16 tokens in {dt:.2f}s "
           f"({8 * 16 / dt:.1f} tok/s on 1 CPU core)")
     print("first two continuations:", toks[:2].tolist())

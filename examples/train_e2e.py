@@ -47,12 +47,18 @@ def main():
     mod.ARCH = spec
     sys.modules["repro.configs.qwen3_100m"] = mod
 
+    # the driver constructs its deployment through repro.deploy and hands
+    # it back; snapshots in ckpt_dir are Deployment.restore-compatible
     out = train_lib.train(
         "qwen3_100m", smoke=False, steps=args.steps, batch=2, seq=128,
         lr=1e-3, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10,
     )
     print(f"final calibration loss: {out['final_loss']:.6f} "
           f"(from {out['history'][0]:.6f})")
+    dep = out["deployment"]
+    print(f"calibrated deployment: sram_bytes={dep.sram_bytes()} "
+          f"({dep.calibrated_fraction():.2%} of params), "
+          f"rram_bytes={dep.rram_bytes()}")
 
 
 if __name__ == "__main__":

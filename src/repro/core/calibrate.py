@@ -112,6 +112,54 @@ def program_model(
     return jax.tree_util.tree_map_with_path(leaf, base)
 
 
+def drift_model(
+    base: Pytree,
+    cfg: RramConfig,
+    key: jax.Array,
+    *,
+    hours: float,
+    event_index: int,
+    clock_offset: float = 0.0,
+) -> Pytree:
+    """One drift-clock tick over a codes-resident model: re-drift every
+    resident ``CrossbarWeight`` WITHOUT reprogramming (the array is never
+    rewritten; time simply passes and the conductances relax further).
+    ``clock_offset`` is the field time already elapsed before this tick —
+    the tick draws the variance INCREMENT over ``[offset, offset+hours]``
+    (``rram.drift_sigma_increment``), so slicing the same timeline into
+    different ticks accumulates the same total drift.
+
+    Deterministic and replayable: each leaf's event key is
+    ``fold_in(fold_in(key, crc32(path)), event_index)``, so a deployment
+    that knows its programming key and the ordered list of elapsed-hour
+    events can reproduce the exact post-drift codes from scratch
+    (``deploy.Deployment.restore`` relies on this).
+    """
+    n_drifted = 0
+
+    def leaf(path, x):
+        nonlocal n_drifted
+        if not isinstance(x, rram.CrossbarWeight):
+            return x
+        n_drifted += 1
+        h = jnp.uint32(zlib.crc32(_path_str(path).encode()))
+        k = jax.random.fold_in(key, h)
+        return rram.apply_drift(
+            x, cfg, k, hours=hours, clock_offset=clock_offset,
+            event_index=event_index,
+        )
+
+    out = jax.tree_util.tree_map_with_path(
+        leaf, base, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )
+    if n_drifted == 0:
+        raise ValueError(
+            "drift_model needs a codes-resident tree (CrossbarWeight leaves); "
+            "got a float tree — program with mode='codes' first"
+        )
+    return out
+
+
 def rram_bytes(base: Pytree) -> int:
     """Bytes of weights resident in RRAM.
 
@@ -134,6 +182,29 @@ def rram_bytes(base: Pytree) -> int:
         leaf, base, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
     )
     return total
+
+
+def sram_bytes(adapters: Pytree) -> int:
+    """Bytes of calibration state resident in SRAM: the DoRA/LoRA side-car
+    arrays at their actual storage width. This is the digital memory the
+    paper trades against RRAM rewrites — compare with ``rram_bytes`` on
+    the same deployment (serve/train print both at startup).
+    """
+    total = 0
+    for x in jax.tree_util.tree_leaves(adapters):
+        if hasattr(x, "nbytes"):
+            total += int(x.nbytes)
+    return total
+
+
+def calibrated_fraction(base: Pytree, adapters: Pytree) -> float:
+    """Fraction of model parameters that calibration trains (paper's 2.34%
+    headline): adapter params / base params, counting a codes-resident
+    ``CrossbarWeight`` as its logical weight count."""
+    from repro.models.transformer import count_params
+
+    n_base, n_adapters = count_params({"base": base, "adapters": adapters})
+    return n_adapters / max(n_base, 1)
 
 
 def merge_adapters_for_serve(base: Pytree, adapters: Pytree) -> Pytree:

@@ -127,10 +127,49 @@ def program(
     return CrossbarWeight(g_pos=g_pos, g_neg=g_neg, scale=scale)
 
 
+# Reference relaxation time constant for the drift clock: sigma(t) grows
+# log-linearly with elapsed time (conductance relaxation is log-time in
+# filamentary RRAM), normalized so sigma(tau*(e-1) ~ 41h) equals the
+# config's relative_drift.
+DRIFT_TAU_HOURS = 24.0
+
+
+def drift_sigma(cfg: RramConfig, hours: float) -> float:
+    """TOTAL relative drift sigma accumulated over ``hours`` of field time
+    since programming.
+
+    Log-time relaxation model: ``sigma(t) = relative_drift *
+    log1p(t / DRIFT_TAU_HOURS)``. ``hours=0`` means no elapsed time (no
+    drift); the config's ``relative_drift`` is reached after
+    ``DRIFT_TAU_HOURS * (e - 1)`` hours.
+    """
+    if hours < 0:
+        raise ValueError(f"drift clock cannot run backwards (hours={hours})")
+    return float(cfg.relative_drift * np.log1p(hours / DRIFT_TAU_HOURS))
+
+
+def drift_sigma_increment(cfg: RramConfig, t0: float, hours: float) -> float:
+    """Sigma for ONE drift tick covering field time ``[t0, t0 + hours]``.
+
+    Independent Gaussian increments add in variance, so the tick draws
+    ``sqrt(sigma(t0+hours)^2 - sigma(t0)^2)`` — the same total elapsed
+    time accumulates (to first order; drift compounds on the already-
+    drifted conductance) the same total drift no matter how the clock is
+    sliced: one ``advance(24)`` matches 24x ``advance(1)`` in variance.
+    """
+    s1 = drift_sigma(cfg, t0 + hours)
+    s0 = drift_sigma(cfg, t0)
+    return float(np.sqrt(max(s1 * s1 - s0 * s0, 0.0)))
+
+
 def apply_drift(
     xw: CrossbarWeight,
     cfg: RramConfig,
     key: jax.Array,
+    *,
+    hours: Optional[float] = None,
+    clock_offset: float = 0.0,
+    event_index: Optional[int] = None,
 ) -> CrossbarWeight:
     """Apply Gaussian conductance relaxation drift (eq. 1) to programmed codes.
 
@@ -141,9 +180,23 @@ def apply_drift(
 
     The result is quantized back to the code grid only for storage
     compactness; fidelity tests confirm the quantization error is << sigma.
+
+    Drift-clock form (``deploy.Deployment.advance``): ``hours`` selects
+    the log-time sigma via ``drift_sigma_increment`` — the variance
+    increment over ``[clock_offset, clock_offset + hours]`` of field
+    time, so the accumulated drift is invariant to how the timeline is
+    sliced into ticks — and ``event_index`` folds the event counter into
+    ``key`` so each tick draws independent noise while the full history
+    stays exactly replayable from the deployment key alone.
     """
-    if cfg.relative_drift <= 0.0:
+    sigma = (
+        cfg.relative_drift if hours is None
+        else drift_sigma_increment(cfg, clock_offset, hours)
+    )
+    if sigma <= 0.0:
         return xw
+    if event_index is not None:
+        key = jax.random.fold_in(key, jnp.uint32(event_index))
     kp, kn = jax.random.split(key)
     # Drift scales with each cell's programmed conductance: the paper
     # bounds |G_drift| by a FRACTION OF G_t ("generally less than 20% of
@@ -151,12 +204,8 @@ def apply_drift(
     # cells (G=0) hold no filament state and stay at 0.
     gp = xw.g_pos.astype(jnp.float32)
     gn = xw.g_neg.astype(jnp.float32)
-    drift_p = gp * (
-        cfg.drift_mu + cfg.relative_drift * jax.random.normal(kp, gp.shape)
-    )
-    drift_n = gn * (
-        cfg.drift_mu + cfg.relative_drift * jax.random.normal(kn, gn.shape)
-    )
+    drift_p = gp * (cfg.drift_mu + sigma * jax.random.normal(kp, gp.shape))
+    drift_n = gn * (cfg.drift_mu + sigma * jax.random.normal(kn, gn.shape))
     g_pos = jnp.clip(gp + drift_p, 0, cfg.code_max)
     g_neg = jnp.clip(gn + drift_n, 0, cfg.code_max)
     return CrossbarWeight(

@@ -1,0 +1,43 @@
+"""Deployment lifecycle API — the repo's single public entry point.
+
+One object carries a model from programming to drift-aware serving:
+
+    from repro.deploy import Deployment
+
+    dep = Deployment.program(cfg, seed, backend="codes")  # programming event
+    dep.advance(hours=24)          # drift clock: field time passes
+    report = dep.calibrate(10)     # SRAM side-car calibration (Alg. 1+2)
+    session = dep.serve()          # merged adapters + backend scope
+    toks, dt = session.generate(prompt)
+    dep.snapshot("/ckpt")          # persist; Deployment.restore replays
+    dep.advance(hours=168); dep.calibrate(10)   # ...and again, forever —
+    # the array is never rewritten (the paper's whole point).
+
+The legacy free functions (``launch.serve.load_student``,
+``serve.backend_scope``, hand-built ``CalibState`` wiring) remain as thin
+shims over this package.
+"""
+from repro.deploy.deployment import (  # noqa: F401
+    CalibrationReport,
+    Deployment,
+    abstract_calib_state,
+    abstract_params,
+    abstract_serve_params,
+)
+from repro.deploy.serving import (  # noqa: F401
+    BACKENDS,
+    ServeSession,
+    backend_scope,
+    generate,
+    prefill_and_cache,
+)
+
+
+def resnet_cell(**kwargs):
+    """CNN-lifecycle entry (paper §IV Fig. 4/6 protocol): teacher ->
+    drift -> calibrate -> evaluate, for the ResNet reproduction. Thin
+    re-export so examples construct every experiment through
+    ``repro.deploy``; see ``core/repro_experiments.run_cell``."""
+    from repro.core.repro_experiments import run_cell
+
+    return run_cell(**kwargs)

@@ -1,0 +1,156 @@
+"""Serving half of the deployment lifecycle: backend scoping, the
+prefill/decode loops, and the ``ServeSession`` handle returned by
+``Deployment.serve()``.
+
+This module owns what ``launch/serve.py`` used to wire by hand (that
+module now delegates here): the RRAM base is frozen (and drifted);
+accuracy comes from the DoRA side-cars that were calibrated in SRAM.
+``merge_magnitude`` (Algorithm 2 line 12) folds the DoRA column norms
+once at serve-session creation so each decode matmul pays only the
+low-rank epilogue.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import substrate
+
+BACKENDS = ("dequant", "codes", "codes_adc")
+
+
+def backend_scope(backend: str, cfg=None):
+    """Context manager binding the substrate backend for trace time.
+
+    Substrate-aware scoping: passing the model config plumbs its
+    ``RramConfig`` into the ADC-faithful backend automatically
+    (``code_max``/``adc_bits`` must match the programmed deployment —
+    ``ServeSession`` always passes its deployment's config, so sessions
+    never serve with a mismatched ADC).
+    """
+    if backend == "dequant":
+        return contextlib.nullcontext()
+    if backend == "codes_adc" and cfg is not None:
+        return substrate.use_backend(
+            backend, code_max=cfg.rram.code_max, adc_bits=cfg.rram.adc_bits
+        )
+    return substrate.use_backend(backend)
+
+
+def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
+    """Run the prompt through the model step-by-step to build the cache.
+
+    (A fused full-sequence prefill that scatters into the cache is the
+    perf path on TPU; the loop keeps serving logic simple on CPU and is
+    identical in semantics.)
+    """
+    from repro.models import transformer as T
+
+    b, s = tokens.shape
+    src_len = enc_embeds.shape[1] if enc_embeds is not None else 0
+    cache = T.init_cache(cfg, b, max_len, src_len=src_len)
+    if cfg.encoder_layers:
+        cache["enc_out"] = T.encode(
+            params["base"], params["adapters"], enc_embeds, cfg
+        )
+    logits = None
+    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    for i in range(s):
+        logits, cache = step(params, cache, tokens[:, i : i + 1], jnp.int32(i))
+    return logits, cache
+
+
+def _next_token(logits, temperature: float, key):
+    """Greedy or temperature sampling of the next token; returns
+    (token, advanced key). EVERY position — including the first generated
+    token — goes through this, so ``temperature > 0`` is honored from
+    token 0 (the old serve loop argmax'd the first token regardless)."""
+    if temperature > 0 and key is not None:
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+        return tok.astype(jnp.int32), key
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32), key
+
+
+def generate(
+    params, prompt: jax.Array, cfg, *, gen_len: int = 16,
+    temperature: float = 0.0, enc_embeds=None, key=None,
+) -> Tuple[np.ndarray, float]:
+    from repro.models import transformer as T
+
+    b, s = prompt.shape
+    max_len = s + gen_len
+    logits, cache = prefill_and_cache(params, prompt, cfg, max_len, enc_embeds)
+    out = []
+    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    tok, key = _next_token(logits, temperature, key)
+    t0 = time.perf_counter()
+    for i in range(gen_len):
+        out.append(np.asarray(tok))
+        logits, cache = step(params, cache, tok, jnp.int32(s + i))
+        tok, key = _next_token(logits, temperature, key)
+    dt = time.perf_counter() - t0
+    return np.concatenate(out, axis=1), dt
+
+
+class ServeSession:
+    """A deployment bound for serving: adapters merged (Algorithm 2 line
+    12), substrate backend scope applied around every call.
+
+    Obtained from ``Deployment.serve()``; holds ``params`` in the exact
+    ``{"base", "adapters"}`` layout the transformer forward consumes, so
+    custom serving loops can also reach in directly (inside
+    ``session.scope()``)."""
+
+    def __init__(self, deployment, params):
+        self.deployment = deployment
+        self.params = params
+
+    @property
+    def cfg(self):
+        return self.deployment.cfg
+
+    @property
+    def backend(self) -> str:
+        return self.deployment.backend
+
+    def scope(self):
+        """The substrate backend scope for this session (RramConfig
+        options plumbed automatically). Wrap any custom trace in it."""
+        return backend_scope(self.backend, self.cfg)
+
+    def prefill(self, tokens, max_len: int, enc_embeds=None):
+        with self.scope():
+            return prefill_and_cache(
+                self.params, tokens, self.cfg, max_len, enc_embeds
+            )
+
+    def generate(
+        self, prompt, *, gen_len: int = 16, temperature: float = 0.0,
+        enc_embeds=None, key=None,
+    ) -> Tuple[np.ndarray, float]:
+        with self.scope():
+            return generate(
+                self.params, prompt, self.cfg, gen_len=gen_len,
+                temperature=temperature, enc_embeds=enc_embeds, key=key,
+            )
+
+    def describe(self) -> str:
+        """Startup log line: resident RRAM bytes, SRAM side-car bytes and
+        the calibrated-parameter fraction (paper's 2.34% headline)."""
+        from repro.core.calibrate import (
+            calibrated_fraction, rram_bytes, sram_bytes,
+        )
+
+        kind = "measured resident" if self.backend != "dequant" else "estimated"
+        frac = calibrated_fraction(self.params["base"], self.params["adapters"])
+        return (
+            f"backend={self.backend} rram_bytes={rram_bytes(self.params['base'])}"
+            f" ({kind}) sram_bytes={sram_bytes(self.params['adapters'])}"
+            f" calibrated_params={frac:.2%}"
+        )

@@ -21,22 +21,21 @@ from typing import Dict, Optional, Tuple  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import deploy  # noqa: E402
 from repro.configs import ARCH_IDS, get_arch, input_specs  # noqa: E402
 from repro.configs.shapes import ArchSpec, ShapeSpec  # noqa: E402
 from repro.core.calibrate import CalibState, make_calib_step  # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
 from repro.launch.roofline import Roofline, collective_bytes  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
-from repro.optim.adam import AdamW, adamw_init  # noqa: E402
+from repro.optim.adam import AdamW  # noqa: E402
 from repro.sharding import rules as sh  # noqa: E402
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts")
 
-
-def abstract_params(cfg):
-    return jax.eval_shape(
-        lambda: T.init_params(jax.random.PRNGKey(0), cfg)
-    )
+# Abstract deployment views (eval_shape) come from the lifecycle API so
+# the compile planner and the live drivers build the same structures.
+abstract_params = deploy.abstract_params
 
 
 def _model_flops(cfg, arch, params_abs, shape: ShapeSpec, n_devices: int) -> float:
@@ -78,11 +77,8 @@ def build_step(arch: ArchSpec, shape: ShapeSpec, mesh, *, smoke=False,
     if shape.kind == "train":
         opt = AdamW(lr=1e-3)
         step_fn = make_calib_step(cfg, opt)
-        opt_abs = jax.eval_shape(adamw_init, params_abs["adapters"])
-        state_abs = CalibState(
-            params_abs["base"], params_abs["base"], params_abs["adapters"],
-            opt_abs, jax.ShapeDtypeStruct((), jnp.int32),
-        )
+        state_abs = deploy.abstract_calib_state(cfg, params_abs)
+        opt_abs = state_abs.opt_state
         opt_sh = sh.tree_shardings(opt_abs, mesh, (), dp=dp, tp=tp)
         step_sh = sh.tree_shardings(
             jax.ShapeDtypeStruct((), jnp.int32), mesh, (), dp=dp, tp=tp
@@ -99,10 +95,7 @@ def build_step(arch: ArchSpec, shape: ShapeSpec, mesh, *, smoke=False,
         )
 
     # inference paths serve the MERGED adapters (Algorithm 2 line 12)
-    from repro.core.calibrate import merge_adapters_for_serve
-    merged_abs = jax.eval_shape(
-        merge_adapters_for_serve, params_abs["base"], params_abs["adapters"]
-    )
+    merged_abs = deploy.abstract_serve_params(cfg, params_abs)["adapters"]
     m_sh = sh.tree_shardings(merged_abs, mesh, (), dp=dp, tp=tp)
     p_sh_serve = {"base": p_sh["base"], "adapters": m_sh}
 

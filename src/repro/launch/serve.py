@@ -1,10 +1,11 @@
-"""Batched serving driver: prefill + decode with the calibrated student.
+"""Batched serving driver over the deployment lifecycle API.
 
-Demonstrates the deployment story of the paper: the RRAM base is frozen
-(and drifted); accuracy comes from the DoRA side-cars that were calibrated
-in SRAM. ``merge_magnitude`` (Algorithm 2 line 12) folds the DoRA column
-norms once at load time so each decode matmul pays only the low-rank
-epilogue.
+The deployment story of the paper — program once, drift in the field,
+calibrate the SRAM side-cars, serve — is owned by
+``repro.deploy.Deployment``; this driver just parses flags, programs a
+deployment and serves it. ``load_student`` / ``backend_scope`` /
+``prefill_and_cache`` / ``generate`` remain as thin deprecation shims
+over ``repro.deploy`` for callers of the old free-function API.
 
 The ``--backend`` flag selects the substrate execution backend
 (repro/substrate): ``dequant`` (float read-back fast path, the default),
@@ -20,97 +21,30 @@ CPU-scale usage:
 from __future__ import annotations
 
 import argparse
-import contextlib
-import time
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import substrate
+from repro import deploy
 from repro.configs import get_arch
-from repro.core.calibrate import program_model, rram_bytes
-from repro.models import transformer as T
 
-BACKENDS = ("dequant", "codes", "codes_adc")
+# Re-exported lifecycle pieces (deprecated import path; use repro.deploy).
+BACKENDS = deploy.BACKENDS
+backend_scope = deploy.backend_scope
+prefill_and_cache = deploy.prefill_and_cache
+generate = deploy.generate
 
 
 def load_student(cfg, seed: int = 0, adapters=None, *, backend: str = "dequant") -> Dict:
-    """Init a teacher, program it onto RRAM, attach (given or fresh)
-    adapters with the DoRA magnitudes merged for serving (Algorithm 2
-    line 12 — no per-step norm recompute; §Perf H-6).
-
-    ``backend='dequant'`` programs the deployment as drifted floats
-    (today's fast path); ``'codes'``/``'codes_adc'`` keep the uint8
-    conductance codes resident (same programming event, same keys)."""
-    from repro.core.calibrate import merge_adapters_for_serve
-
-    mode = "dequant" if backend == "dequant" else "codes"
-    params = T.init_params(jax.random.PRNGKey(seed), cfg)
-    student = program_model(
-        params["base"], cfg.rram, jax.random.PRNGKey(seed + 1), mode=mode
-    )
-    merged = merge_adapters_for_serve(student, adapters or params["adapters"])
-    return {"base": student, "adapters": merged}
-
-
-def backend_scope(backend: str, cfg=None):
-    """Context manager binding the substrate backend for trace time.
-    Passing the model config plumbs its RramConfig into the ADC-faithful
-    backend (code_max/adc_bits must match the programmed deployment)."""
-    if backend == "dequant":
-        return contextlib.nullcontext()
-    if backend == "codes_adc" and cfg is not None:
-        return substrate.use_backend(
-            backend, code_max=cfg.rram.code_max, adc_bits=cfg.rram.adc_bits
-        )
-    return substrate.use_backend(backend)
-
-
-def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
-    """Run the prompt through the model step-by-step to build the cache.
-
-    (A fused full-sequence prefill that scatters into the cache is the
-    perf path on TPU; the loop keeps serving logic simple on CPU and is
-    identical in semantics.)
-    """
-    b, s = tokens.shape
-    src_len = enc_embeds.shape[1] if enc_embeds is not None else 0
-    cache = T.init_cache(cfg, b, max_len, src_len=src_len)
-    if cfg.encoder_layers:
-        cache["enc_out"] = T.encode(
-            params["base"], params["adapters"], enc_embeds, cfg
-        )
-    logits = None
-    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
-    for i in range(s):
-        logits, cache = step(params, cache, tokens[:, i : i + 1], jnp.int32(i))
-    return logits, cache
-
-
-def generate(
-    params, prompt: jax.Array, cfg, *, gen_len: int = 16,
-    temperature: float = 0.0, enc_embeds=None, key=None,
-) -> Tuple[np.ndarray, float]:
-    b, s = prompt.shape
-    max_len = s + gen_len
-    logits, cache = prefill_and_cache(params, prompt, cfg, max_len, enc_embeds)
-    out = []
-    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    for i in range(gen_len):
-        out.append(np.asarray(tok))
-        logits, cache = step(params, cache, tok, jnp.int32(s + i))
-        if temperature > 0 and key is not None:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
-            tok = tok.astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    dt = time.perf_counter() - t0
-    return np.concatenate(out, axis=1), dt
+    """DEPRECATED shim over ``repro.deploy.Deployment``: program a
+    deployment and return its serve params (adapters merged, Algorithm 2
+    line 12). Same seeding as always — ``Deployment.program(cfg, seed)``
+    programs the identical deployment (bitwise-identical codes)."""
+    dep = deploy.Deployment.program(cfg, seed, backend=backend)
+    if adapters is not None:
+        dep.adapters = adapters
+    return dep.serve().params
 
 
 def main():
@@ -121,6 +55,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument(
+        "--drift-hours", type=float, default=0.0,
+        help="advance the drift clock this many hours before serving",
+    )
     ap.add_argument(
         "--backend", default="dequant", choices=BACKENDS,
         help="substrate execution backend (see repro/substrate)",
@@ -128,9 +67,13 @@ def main():
     args = ap.parse_args()
     arch = get_arch(args.arch)
     cfg = arch.smoke if args.smoke else arch.full
-    params = load_student(cfg, args.seed, backend=args.backend)
-    kind = "measured resident" if args.backend != "dequant" else "estimated"
-    print(f"rram_bytes: {rram_bytes(params['base'])} ({kind})")
+
+    dep = deploy.Deployment.program(cfg, args.seed, backend=args.backend)
+    if args.drift_hours > 0:
+        dep.advance(args.drift_hours)
+    session = dep.serve()
+    print(session.describe())
+
     key = jax.random.PRNGKey(args.seed)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     enc = None
@@ -138,8 +81,10 @@ def main():
         enc = jax.random.normal(
             key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16
         )
-    with backend_scope(args.backend, cfg):
-        toks, dt = generate(params, prompt, cfg, gen_len=args.gen, enc_embeds=enc)
+    toks, dt = session.generate(
+        prompt, gen_len=args.gen, temperature=args.temperature,
+        enc_embeds=enc, key=jax.random.fold_in(key, 1),
+    )
     tps = args.batch * args.gen / dt
     print(f"backend={args.backend} generated {toks.shape} in {dt:.2f}s "
           f"({tps:.1f} tok/s)")

@@ -15,37 +15,28 @@ config; the step function is identical (it is the one the dry-run lowers).
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
-import time
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import deploy
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
-from repro.core.calibrate import CalibState, make_calib_step, program_model
+from repro.core.calibrate import CalibState, make_calib_step
 from repro.data.pipeline import DataConfig, global_batch_at_step
 from repro.launch import mesh as mesh_lib
-from repro.models import transformer as T
-from repro.optim.adam import AdamW, adamw_init
+from repro.optim.adam import AdamW
 from repro.runtime.fault import PreemptionGuard, StepTimer, StragglerDetector
 from repro.sharding import rules as sh
 
 
 def build_state(cfg, seed: int = 0, *, substrate_mode: str = "dequant") -> CalibState:
-    params = T.init_params(jax.random.PRNGKey(seed), cfg)
-    student = program_model(
-        params["base"], cfg.rram, jax.random.PRNGKey(seed + 1),
-        mode=substrate_mode,
-    )
-    opt_state = adamw_init(params["adapters"])
-    return CalibState(
-        params["base"], student, params["adapters"], opt_state,
-        jnp.zeros((), jnp.int32),
-    )
+    """DEPRECATED shim: the deployment (programming event + calib state)
+    is owned by ``repro.deploy.Deployment``; use ``dep.calib_state()``."""
+    backend = "dequant" if substrate_mode == "dequant" else "codes"
+    return deploy.Deployment.program(cfg, seed, backend=backend).calib_state()
 
 
 def data_config(cfg, *, batch: int, seq: int, samples: int = 10) -> DataConfig:
@@ -103,8 +94,13 @@ def train(
         mesh = mesh_lib.make_production_mesh(multi_pod=use_mesh == "multi")
         dp, tp = mesh_lib.dp_axes(mesh), mesh_lib.tp_axis(mesh)
 
-    substrate_mode = "dequant" if backend == "dequant" else "codes"
-    state = build_state(cfg, seed, substrate_mode=substrate_mode)
+    dep = deploy.Deployment.program(cfg, seed, backend=backend)
+    state = dep.calib_state()
+    print(
+        f"deployment: sram_bytes={dep.sram_bytes()} "
+        f"({dep.calibrated_fraction():.2%} of params calibrated) "
+        f"rram_bytes={dep.rram_bytes()} backend={backend}"
+    )
     manager = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
     start_step = 0
     if manager and resume and manager.latest_step() is not None:
@@ -118,6 +114,7 @@ def train(
             restored["adapters"], restored["opt"],
             jnp.asarray(start_step, jnp.int32),
         )
+        dep.adopt(state)
         print(f"resumed from step {start_step}")
 
     import contextlib
@@ -130,7 +127,7 @@ def train(
         hint_ctx = contextlib.nullcontext()
     # codes-resident student: execute through the differentiable dequant
     # backend (the fused kernel is inference-shaped; AD needs the jnp path).
-    if substrate_mode == "codes":
+    if backend != "dequant":
         from repro import substrate
         backend_ctx = substrate.use_backend("dequant")
     else:
@@ -172,26 +169,21 @@ def train(
             if step % log_every == 0:
                 print(f"step {step:5d} loss {loss:.6f} ({t.elapsed*1e3:.0f} ms)")
             if manager and (step + 1) % ckpt_every == 0:
-                manager.save(
-                    step + 1,
-                    {"adapters": state.adapters, "opt": state.opt_state},
-                    blocking=False,
-                )
+                dep.adopt(state).snapshot(manager, blocking=False)
             if guard.should_stop:
                 print("preemption requested: checkpoint + clean exit")
                 if manager:
-                    manager.save(
-                        step + 1,
-                        {"adapters": state.adapters, "opt": state.opt_state},
-                    )
+                    dep.adopt(state).snapshot(manager)
                 break
     if manager:
         manager.wait()
+    dep.adopt(state)
     return {
         "final_loss": history[-1] if history else None,
         "history": history,
         "straggler_reports": detector.reports,
         "state": state,
+        "deployment": dep,
     }
 
 
