@@ -37,7 +37,9 @@ def backends_bench(quick=True) -> List[Row]:
         dep = Deployment.program(cfg, 0, backend=backend)
         session = dep.serve()
         _, dt = session.generate(prompt, gen_len=gen)
-        tps = batch * gen / dt
+        # dt times the decode steps only; the first token per stream is
+        # sampled from prefill logits, so gen - 1 tokens are decode-timed
+        tps = batch * (gen - 1) / dt
         resident = dep.rram_bytes()
         kind = "measured" if backend != "dequant" else "estimated"
         rows.append(

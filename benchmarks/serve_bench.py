@@ -1,0 +1,113 @@
+"""Continuous-batching serve bench: decode tok/s, time-to-first-token,
+and the retrace counter (compiled computations must stay flat once the
+step registry is warm — the ISSUE 4 regression metric).
+
+Drives ``ServeEngine`` with two waves of ragged, staggered requests per
+backend. Wave 1 warms the per-``(cfg, backend)`` compiled steps; wave 2
+reuses the same prompt shapes, so ANY new compilation it triggers is a
+retrace regression (``recompiles_second_wave`` should be 0).
+
+On this CPU container the codes backend runs its Pallas kernel in
+interpret mode, so absolute wall-times are not TPU-representative; the
+numbers that track the serving story are the retrace count, TTFT vs
+decode split, and their trajectory over PRs.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
+        [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+
+import jax
+import numpy as np
+
+
+def bench_backend(arch: str, backend: str, *, quick: bool) -> dict:
+    from repro.configs import get_arch
+    from repro.deploy import Deployment, ServeEngine, serving
+
+    cfg = get_arch(arch).smoke if quick else get_arch(arch).full
+    n_requests, max_new, max_slots, max_len = (
+        (4, 6, 2, 32) if quick else (16, 32, 8, 256)
+    )
+    prompt_lens = [4 + (3 * i) % 9 for i in range(n_requests)]
+    session = Deployment.program(cfg, 0, backend=backend).serve()
+
+    def wave(seed: int):
+        engine = ServeEngine(session, max_slots=max_slots, max_len=max_len)
+        reqs = []
+        for i, plen in enumerate(prompt_lens):
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(jax.random.PRNGKey(seed), i),
+                (plen,), 0, cfg.vocab,
+            ))
+            reqs.append(engine.submit(prompt, max_new=max_new))
+            engine.step()  # staggered admission while earlier rows decode
+        engine.run()
+        return engine, reqs
+
+    engine1, reqs1 = wave(0)
+    with session.scope():
+        warm = serving.compile_count(cfg)
+    engine2, reqs2 = wave(1)
+    with session.scope():
+        after = serving.compile_count(cfg)
+    stats = engine2.stats()
+    ttfts = [r.ttft_seconds for r in reqs2]
+    return {
+        "requests": n_requests,
+        "max_new": max_new,
+        "max_slots": max_slots,
+        "ticks": stats["ticks"],
+        "decode_tokens": stats["decode_tokens"],
+        "decode_seconds": round(stats["decode_seconds"], 4),
+        "decode_tok_per_s": round(stats["decode_tok_per_s"], 2),
+        "ttft_s_mean": round(statistics.mean(ttfts), 4),
+        "ttft_s_max": round(max(ttfts), 4),
+        "compile_count_warm": warm,
+        "recompiles_second_wave": after - warm,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs + request counts (CI lane)")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--backends", default="dequant,codes")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    result = {
+        "bench": "serve_engine",
+        "arch": args.arch,
+        "mode": "smoke" if args.smoke else "full",
+        "backends": {},
+    }
+    failures = 0
+    for backend in args.backends.split(","):
+        try:
+            result["backends"][backend] = bench_backend(
+                args.arch, backend, quick=args.smoke
+            )
+        except Exception as e:  # keep the suite going; fail at the end
+            result["backends"][backend] = {"error": repr(e)}
+            failures += 1
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(result, indent=2, sort_keys=True))
+    retraces = [
+        b.get("recompiles_second_wave") for b in result["backends"].values()
+        if isinstance(b, dict) and "recompiles_second_wave" in b
+    ]
+    if failures or any(r != 0 for r in retraces):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

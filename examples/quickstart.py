@@ -52,7 +52,8 @@ def main():
     session = dep.serve()
     print(session.describe())
     toks, dt = session.generate(batch["tokens"][:, :8], gen_len=8)
-    print(f"served {toks.shape} in {dt:.2f}s; first row: {toks[0].tolist()}")
+    print(f"served {toks.shape} (decode steps: {dt:.2f}s); "
+          f"first row: {toks[0].tolist()}")
 
     # ...time keeps passing: drift again, recalibrate again — same array
     dep.advance(hours=168)

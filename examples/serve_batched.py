@@ -1,13 +1,14 @@
-"""Batched serving example: program a deployment, calibrate it, then
-serve batched requests (prefill + decode against the KV cache) with
-temperature sampling — every stage through ``repro.deploy.Deployment``.
+"""Continuous-batching serving example: program a deployment, calibrate
+it, then serve ragged concurrent requests through ``ServeEngine`` —
+slot-based scheduling over one fixed (max_slots, max_len) cache, fused
+prefill at admission, one compiled batched decode step for every tick.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import jax
 
 from repro.configs import get_arch
-from repro.deploy import Deployment
+from repro.deploy import Deployment, ServeEngine
 
 
 def main():
@@ -20,14 +21,32 @@ def main():
 
     session = dep.serve()
     print(session.describe())
+
+    # 8 requests with ragged prompt lengths, admitted while earlier ones
+    # are mid-decode — 4 slots, recycled as requests finish. Temperature
+    # sampling applies from the FIRST generated token, per-request keys.
+    engine = ServeEngine(session, max_slots=4, max_len=48)
     key = jax.random.PRNGKey(0)
-    # 8 concurrent requests, batch-decoded; temperature sampling applies
-    # from the FIRST generated token
-    prompts = jax.random.randint(key, (8, 12), 0, cfg.vocab)
-    toks, dt = session.generate(prompts, gen_len=16, temperature=0.8, key=key)
-    print(f"served 8 requests x 16 tokens in {dt:.2f}s "
-          f"({8 * 16 / dt:.1f} tok/s on 1 CPU core)")
-    print("first two continuations:", toks[:2].tolist())
+    reqs = []
+    for i in range(8):
+        lk, pk, sk, key = jax.random.split(key, 4)
+        plen = int(jax.random.randint(lk, (), 4, 16))
+        prompt = jax.random.randint(pk, (plen,), 0, cfg.vocab)
+        reqs.append(
+            engine.submit(prompt, max_new=16, temperature=0.8, key=sk)
+        )
+        engine.step()  # requests stream in while the batch decodes
+    engine.run()
+
+    stats = engine.stats()
+    print(
+        f"served {len(reqs)} ragged requests in {stats['ticks']} ticks: "
+        f"{stats['decode_tokens']} decode tok in "
+        f"{stats['decode_seconds']:.2f}s = {stats['decode_tok_per_s']:.1f} "
+        f"tok/s on 1 CPU core; compiled computations: "
+        f"{stats['compile_count']} (flat across requests)"
+    )
+    print("first two continuations:", reqs[0].tokens, reqs[1].tokens)
 
 
 if __name__ == "__main__":

@@ -24,12 +24,16 @@ from repro.deploy.deployment import (  # noqa: F401
     abstract_params,
     abstract_serve_params,
 )
+from repro.deploy.engine import Request, ServeEngine  # noqa: F401
 from repro.deploy.serving import (  # noqa: F401
     BACKENDS,
     ServeSession,
     backend_scope,
+    compile_count,
+    decode_step_fn,
     generate,
     prefill_and_cache,
+    prefill_fn,
 )
 
 

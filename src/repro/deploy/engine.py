@@ -1,0 +1,240 @@
+"""Continuous-batching serve engine over the vectorized decode step.
+
+The paper's deployment story ends here: the RRAM base is frozen, the
+DoRA side-cars are merged into the kernel epilogue, and every decoded
+token pays one crossbar matmul plus the low-rank epilogue. What this
+module adds is the traffic shape of that story — many concurrent
+requests with ragged prompts, arriving and finishing at different times,
+all advanced by ONE compiled batched ``decode_step``:
+
+* **Slots.** A fixed ``(max_slots, max_len)`` decode cache is allocated
+  once. Each in-flight request owns one slot (one batch row); finished
+  slots are recycled for queued requests.
+* **Per-slot clocks.** ``pos`` is a ``(B,)`` int32 vector — every slot
+  sits at its own sequence offset, so ragged prompt lengths and
+  mid-stream admission need no padding or lockstep restarts.
+* **Admission = prefill into a slot.** ``submit()`` runs the fused
+  full-sequence prefill for the new request (batch=1, the engine's
+  ``max_len``) and scatters the resulting K/V / latents / recurrent
+  state into the slot's row (``transformer.write_cache_slot``). The
+  first token is sampled from the prefill logits (time-to-first-token is
+  recorded per request).
+* **One jitted step for everyone.** ``step()`` advances ALL active slots
+  with a single ``decode_step_fn(cfg)`` call — compiled once per
+  ``(cfg, backend)`` in ``deploy.serving`` and reused across requests,
+  sessions, and engines (the retrace fix). Inactive slots ride along as
+  dead rows: their writes land in recycled cache lines that the per-slot
+  validity masks keep invisible to live requests.
+* **Per-slot stopping.** A request retires when it samples its
+  ``eos_id`` or hits ``max_new`` / ``max_len``; its slot frees
+  immediately and the admission loop refills it on the next tick.
+
+Determinism: every row of the batched step computes exactly what a
+single-request ``serving.generate`` call computes (row-independent
+kernels + per-slot masks), so engine output is bitwise-identical to N
+independent ``generate`` calls — tests/test_engine.py pins this on the
+``dequant`` and ``codes`` backends, ragged + staggered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.deploy import serving
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle record."""
+
+    rid: int
+    prompt: np.ndarray               # (s,) int32
+    max_new: int
+    temperature: float = 0.0
+    key: Optional[jax.Array] = None  # advanced as the request samples
+    eos_id: Optional[int] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    slot: Optional[int] = None       # None while queued / after retiring
+    admitted_tick: Optional[int] = None
+    submitted_at: Optional[float] = None  # perf_counter at submit()
+    ttft_seconds: Optional[float] = None  # submit -> first token (incl. queue wait)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class ServeEngine:
+    """Slot-based continuous-batching scheduler over a ``ServeSession``.
+
+    ``submit()`` admits (or queues) a request; ``step()`` advances every
+    active slot by one token; ``run()`` drains the queue. Decoder-only
+    configs (the engine recomputes nothing per slot except the token
+    stream; cross-attention serving stays on ``serving.generate``).
+    """
+
+    def __init__(self, session, *, max_slots: int = 4, max_len: int = 128):
+        from repro.models import transformer as T
+
+        if session.cfg.encoder_layers:
+            raise NotImplementedError(
+                "ServeEngine is decoder-only; encoder-decoder serving "
+                "goes through serving.generate"
+            )
+        self.session = session
+        self.cfg = session.cfg
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        with session.scope():
+            self.cache = T.init_cache(self.cfg, self.max_slots, self.max_len)
+        # per-slot clocks / occupancy (host-side scheduler state)
+        self.pos = np.zeros(self.max_slots, np.int32)
+        self.active = np.zeros(self.max_slots, bool)
+        self.last_tok = np.zeros((self.max_slots, 1), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * self.max_slots
+        self.pending: Deque[Request] = deque()
+        self.tick = 0
+        self.decode_seconds = 0.0   # time inside batched decode steps
+        self.decode_tokens = 0      # tokens produced by those steps
+        self._next_rid = 0
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(
+        self, prompt, *, max_new: int = 16, temperature: float = 0.0,
+        key: Optional[jax.Array] = None, eos_id: Optional[int] = None,
+    ) -> Request:
+        """Enqueue a request; admits it immediately if a slot is free.
+        ``prompt`` is a (s,) or (1, s) int token array."""
+        serving._check_sampling_args(temperature, key)
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"engine max_len ({self.max_len})"
+            )
+        req = Request(
+            rid=self._next_rid, prompt=prompt, max_new=int(max_new),
+            temperature=float(temperature), key=key, eos_id=eos_id,
+            submitted_at=time.perf_counter(),
+        )
+        self._next_rid += 1
+        self.pending.append(req)
+        self._admit_pending()
+        return req
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.max_slots) if self.slot_req[i] is None]
+
+    def _admit_pending(self) -> None:
+        from repro.models import transformer as T
+
+        free = self._free_slots()
+        while free and self.pending:
+            slot = free.pop(0)
+            req = self.pending.popleft()
+            with self.session.scope():
+                logits, one = serving.prefill_and_cache(
+                    self.session.params, jnp.asarray(req.prompt)[None, :],
+                    self.cfg, self.max_len,
+                )
+                self.cache = T.write_cache_slot(self.cache, one, slot)
+            tok, req.key = serving._next_token(logits, req.temperature, req.key)
+            first = int(np.asarray(tok)[0, 0])
+            req.ttft_seconds = time.perf_counter() - req.submitted_at
+            req.tokens.append(first)
+            req.admitted_tick = self.tick
+            if req.max_new <= 1 or first == req.eos_id:
+                req.done = True  # nothing to decode — hand the slot back
+                free.insert(0, slot)
+                continue
+            req.slot = slot
+            self.slot_req[slot] = req
+            self.active[slot] = True
+            self.pos[slot] = req.prompt_len  # next write position
+            self.last_tok[slot, 0] = first
+
+    # -- decode tick ---------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit what fits, then advance every active slot by one token
+        with a single batched ``decode_step``. Returns False when there
+        is nothing left to do (no active slots, empty queue)."""
+        self._admit_pending()
+        if not self.active.any():
+            return bool(self.pending)
+        t0 = time.perf_counter()
+        with self.session.scope():
+            # fetch INSIDE the scope: the registry key includes the
+            # active backend name, and codes vs codes_adc sessions share
+            # identical param avals — a scope-blind fetch would let one
+            # hit the other's trace
+            step = serving.decode_step_fn(self.cfg)
+            logits, self.cache = step(
+                self.session.params, self.cache,
+                jnp.asarray(self.last_tok), jnp.asarray(self.pos),
+            )
+        n_live = int(self.active.sum())
+        for slot in np.flatnonzero(self.active):
+            req = self.slot_req[slot]
+            tok, req.key = serving._next_token(
+                logits[slot : slot + 1], req.temperature, req.key
+            )
+            t = int(np.asarray(tok)[0, 0])
+            req.tokens.append(t)
+            self.pos[slot] += 1
+            self.last_tok[slot, 0] = t
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            out_of_room = int(self.pos[slot]) + 1 >= self.max_len
+            if len(req.tokens) >= req.max_new or hit_eos or out_of_room:
+                self._retire(slot)
+        self.decode_seconds += time.perf_counter() - t0
+        self.decode_tokens += n_live
+        self.tick += 1
+        return True
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        req.slot = None
+        self.slot_req[slot] = None
+        self.active[slot] = False
+
+    def run(self) -> None:
+        """Drain: admit + step until every submitted request retired."""
+        while self.step():
+            pass
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    def compile_count(self) -> int:
+        """Compiled-computation count for this engine's (cfg, backend)
+        step functions — flat across requests once warm (the retrace
+        regression metric)."""
+        with self.session.scope():
+            return serving.compile_count(self.cfg)
+
+    def stats(self) -> dict:
+        return {
+            "ticks": self.tick,
+            "decode_seconds": self.decode_seconds,
+            "decode_tokens": self.decode_tokens,
+            "decode_tok_per_s": (
+                self.decode_tokens / self.decode_seconds
+                if self.decode_seconds > 0 else float("nan")
+            ),
+            "compile_count": self.compile_count(),
+        }

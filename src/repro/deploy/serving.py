@@ -1,6 +1,6 @@
 """Serving half of the deployment lifecycle: backend scoping, the
-prefill/decode loops, and the ``ServeSession`` handle returned by
-``Deployment.serve()``.
+prefill/decode step functions, and the ``ServeSession`` handle returned
+by ``Deployment.serve()``.
 
 This module owns what ``launch/serve.py`` used to wire by hand (that
 module now delegates here): the RRAM base is frozen (and drifted);
@@ -8,12 +8,21 @@ accuracy comes from the DoRA side-cars that were calibrated in SRAM.
 ``merge_magnitude`` (Algorithm 2 line 12) folds the DoRA column norms
 once at serve-session creation so each decode matmul pays only the
 low-rank epilogue.
+
+Compiled step functions are built ONCE per ``(cfg, backend)`` and reused
+across every request and session (``decode_step_fn`` / ``prefill_fn``).
+The old code re-wrapped ``jax.jit`` around a fresh lambda on every
+``prefill_and_cache``/``generate`` call, so each request retraced and
+recompiled the whole decode stack; the registry below is the fix, and
+``compile_count`` exposes the counter the regression tests pin down.
+The continuous-batching engine over these steps lives in
+``repro/deploy/engine.py``.
 """
 from __future__ import annotations
 
 import contextlib
 import time
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,27 +51,81 @@ def backend_scope(backend: str, cfg=None):
     return substrate.use_backend(backend)
 
 
-def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
-    """Run the prompt through the model step-by-step to build the cache.
+# ---------------------------------------------------------------------------
+# compiled-step registry (the retrace fix)
+# ---------------------------------------------------------------------------
+#
+# The substrate backend is read at TRACE time (substrate.use_backend), so
+# a jitted step is only reusable under the backend it was traced with —
+# the registry key is (cfg, active backend name). Shape variation within
+# one entry (batch size, prompt length) is handled by jax.jit's own
+# argument cache on the SAME callable, which is exactly what rebuilding
+# the lambda per call threw away.
 
-    (A fused full-sequence prefill that scatters into the cache is the
-    perf path on TPU; the loop keeps serving logic simple on CPU and is
-    identical in semantics.)
-    """
+_STEP_REGISTRY: Dict[Tuple, "jax.stages.Wrapped"] = {}
+
+
+def _registry_get(kind: str, cfg, build):
+    key = (kind, cfg, substrate.active_backend_name())
+    fn = _STEP_REGISTRY.get(key)
+    if fn is None:
+        fn = _STEP_REGISTRY[key] = build()
+    return fn
+
+
+def decode_step_fn(cfg):
+    """The jitted batched decode step for ``(cfg, active backend)``,
+    built once and shared by every request, session, and the engine.
+    ``pos`` is a (B,) vector of per-slot clocks (scalars broadcast)."""
     from repro.models import transformer as T
 
-    b, s = tokens.shape
-    src_len = enc_embeds.shape[1] if enc_embeds is not None else 0
-    cache = T.init_cache(cfg, b, max_len, src_len=src_len)
-    if cfg.encoder_layers:
-        cache["enc_out"] = T.encode(
-            params["base"], params["adapters"], enc_embeds, cfg
-        )
-    logits = None
-    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
-    for i in range(s):
-        logits, cache = step(params, cache, tokens[:, i : i + 1], jnp.int32(i))
-    return logits, cache
+    return _registry_get(
+        "decode", cfg,
+        lambda: jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg)),
+    )
+
+
+def prefill_fn(cfg):
+    """The jitted fused prefill for ``(cfg, active backend)``: one
+    full-sequence forward returning (last logits, decode cache) —
+    ``max_len`` is static (cache buffer extent)."""
+    from repro.models import transformer as T
+
+    return _registry_get(
+        "prefill", cfg,
+        lambda: jax.jit(
+            lambda p, t, max_len, e=None: T.prefill(p, t, cfg, max_len, e),
+            static_argnums=(2,),
+        ),
+    )
+
+
+def compile_count(cfg) -> int:
+    """Total compiled-computation count across this (cfg, backend)'s
+    step functions. Flat across repeated same-shape requests — the
+    regression tests and ``benchmarks/serve_bench.py`` track it as the
+    retrace counter."""
+    total = 0
+    for kind in ("decode", "prefill"):
+        fn = _STEP_REGISTRY.get((kind, cfg, substrate.active_backend_name()))
+        if fn is not None:
+            # _cache_size is private jax API; the zero-recompile test's
+            # `warm > 0` assertion is the canary if an upgrade drops it
+            size = getattr(fn, "_cache_size", None)
+            total += size() if callable(size) else 0
+    return total
+
+
+def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
+    """Fused prefill: ONE full-sequence forward computes every layer's
+    K/V (MLA latents, recurrent states) batched over the prompt and
+    scatters them into the decode cache — replaces the old per-token
+    ``decode_step`` Python loop (S sequential dispatches). Returns
+    ``(last_logits (B,1,V), cache)``; parity with the step-by-step loop
+    is pinned in tests/test_engine.py."""
+    if cfg.encoder_layers and enc_embeds is None:
+        raise ValueError("encoder-decoder config needs enc_embeds")
+    return prefill_fn(cfg)(params, tokens, int(max_len), enc_embeds)
 
 
 def _next_token(logits, temperature: float, key):
@@ -77,23 +140,45 @@ def _next_token(logits, temperature: float, key):
     return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32), key
 
 
+def _check_sampling_args(temperature: float, key) -> None:
+    """Surface intent mismatches instead of silently ignoring one of the
+    two sampling knobs."""
+    if temperature > 0 and key is None:
+        raise ValueError("temperature > 0 needs a PRNG key")
+    if temperature == 0 and key is not None:
+        raise ValueError(
+            "a PRNG key was passed but temperature == 0 samples greedily "
+            "and would ignore it; pass temperature > 0 or drop the key"
+        )
+
+
 def generate(
     params, prompt: jax.Array, cfg, *, gen_len: int = 16,
     temperature: float = 0.0, enc_embeds=None, key=None,
 ) -> Tuple[np.ndarray, float]:
-    from repro.models import transformer as T
-
+    """Reference single-stream generation loop: fused prefill, then
+    ``gen_len - 1`` decode steps (the first token comes from the prefill
+    logits). Returns ``(tokens (B, gen_len), dt)`` where ``dt`` covers
+    exactly those decode steps — so decode tok/s is
+    ``B * (gen_len - 1) / dt``, with no prefill-sampled token smuggled
+    into a decode-only timer. The continuous-batching path is
+    ``repro.deploy.engine.ServeEngine``."""
+    _check_sampling_args(temperature, key)
+    if gen_len < 1:
+        raise ValueError(f"gen_len must be >= 1, got {gen_len}")
     b, s = prompt.shape
     max_len = s + gen_len
     logits, cache = prefill_and_cache(params, prompt, cfg, max_len, enc_embeds)
-    out = []
-    step = jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg))
+    step = decode_step_fn(cfg)
     tok, key = _next_token(logits, temperature, key)
+    out = [np.asarray(tok)]
     t0 = time.perf_counter()
-    for i in range(gen_len):
-        out.append(np.asarray(tok))
-        logits, cache = step(params, cache, tok, jnp.int32(s + i))
+    for i in range(gen_len - 1):
+        logits, cache = step(
+            params, cache, tok, jnp.full((b,), s + i, jnp.int32)
+        )
         tok, key = _next_token(logits, temperature, key)
+        out.append(np.asarray(tok))
     dt = time.perf_counter() - t0
     return np.concatenate(out, axis=1), dt
 
@@ -110,6 +195,7 @@ class ServeSession:
     def __init__(self, deployment, params):
         self.deployment = deployment
         self.params = params
+        self._auto_key_calls = 0
 
     @property
     def cfg(self):
@@ -124,6 +210,18 @@ class ServeSession:
         options plumbed automatically). Wrap any custom trace in it."""
         return backend_scope(self.backend, self.cfg)
 
+    def _sampling_key(self, temperature: float, key):
+        """Derive a sampling key from the deployment key when the caller
+        asks for temperature sampling without providing one (it used to
+        silently fall back to greedy); reject a key with temperature 0."""
+        if temperature > 0 and key is None:
+            self._auto_key_calls += 1
+            key = jax.random.fold_in(
+                self.deployment.program_key, self._auto_key_calls
+            )
+        _check_sampling_args(temperature, key)
+        return key
+
     def prefill(self, tokens, max_len: int, enc_embeds=None):
         with self.scope():
             return prefill_and_cache(
@@ -134,11 +232,33 @@ class ServeSession:
         self, prompt, *, gen_len: int = 16, temperature: float = 0.0,
         enc_embeds=None, key=None,
     ) -> Tuple[np.ndarray, float]:
-        with self.scope():
-            return generate(
-                self.params, prompt, self.cfg, gen_len=gen_len,
-                temperature=temperature, enc_embeds=enc_embeds, key=key,
+        """Single-call generation: each prompt row becomes one request on
+        a throwaway continuous-batching engine (all admitted at tick 0),
+        so this shares the compiled steps and slot bookkeeping with the
+        production serving path. Encoder-decoder configs fall back to the
+        reference loop (the engine is decoder-only)."""
+        key = self._sampling_key(temperature, key)
+        if self.cfg.encoder_layers:
+            with self.scope():
+                return generate(
+                    self.params, prompt, self.cfg, gen_len=gen_len,
+                    temperature=temperature, enc_embeds=enc_embeds, key=key,
+                )
+        from repro.deploy.engine import ServeEngine
+
+        b, s = prompt.shape
+        engine = ServeEngine(self, max_slots=b, max_len=s + gen_len)
+        reqs = [
+            engine.submit(
+                prompt[i], max_new=gen_len, temperature=temperature,
+                key=None if key is None else jax.random.fold_in(key, i),
             )
+            for i in range(b)
+        ]
+        engine.run()
+        dt = engine.decode_seconds
+        toks = np.stack([np.asarray(r.tokens, np.int32) for r in reqs])
+        return toks, dt
 
     def describe(self) -> str:
         """Startup log line: resident RRAM bytes, SRAM side-car bytes and

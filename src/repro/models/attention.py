@@ -188,9 +188,12 @@ def attention(
     positions: Optional[jax.Array] = None,
     kv_input: Optional[jax.Array] = None,  # encoder output for cross-attn
     mask: Optional[jax.Array] = None,  # override (encoder bidir / prefix-LM)
+    return_kv: bool = False,  # also return the post-rope K/V for prefill
 ) -> jax.Array:
     if cfg.mla:
-        return _mla_attention(x, base, adapters, cfg, acfg, positions, mask)
+        return _mla_attention(
+            x, base, adapters, cfg, acfg, positions, mask, return_kv=return_kv
+        )
     a = adapters or {}
     b_, s, _ = x.shape
     kv_src = kv_input if cfg.is_cross else x
@@ -216,11 +219,15 @@ def attention(
             mask = causal_mask(s, t, cfg.window)
     # cross-attention default: full bidirectional over encoder states
     out = _sdpa(q, k, v, cfg.scale, mask)
-    return L.linear(out.reshape(b_, s, -1), base["o"], a.get("o"), acfg)
+    y = L.linear(out.reshape(b_, s, -1), base["o"], a.get("o"), acfg)
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
 
 
 def _mla_attention(
-    x, base, adapters, cfg: AttentionConfig, acfg, positions, mask=None
+    x, base, adapters, cfg: AttentionConfig, acfg, positions, mask=None,
+    return_kv: bool = False,
 ):
     a = adapters or {}
     b_, s, _ = x.shape
@@ -248,7 +255,12 @@ def _mla_attention(
     if mask is None:
         mask = causal_mask(s, s, cfg.window)
     out = _sdpa(q_full, k_full, v, cfg.scale, mask)
-    return L.linear(out.reshape(b_, s, -1), base["o"], a.get("o"), acfg)
+    y = L.linear(out.reshape(b_, s, -1), base["o"], a.get("o"), acfg)
+    if return_kv:
+        # the decode cache holds the compressed latent + shared rope key,
+        # both post-norm/post-rope — exactly what _mla_decode writes
+        return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -276,28 +288,62 @@ def init_kv_cache(
     }
 
 
+def _as_pos_vector(pos: jax.Array, batch: int) -> jax.Array:
+    """Normalize ``pos`` to a (B,) int32 vector of per-slot clocks.
+    Scalar ``pos`` (the legacy lockstep-batch calling convention)
+    broadcasts to every row."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((batch,), pos, jnp.int32)
+    return pos
+
+
 def _cache_write(buf: jax.Array, val: jax.Array, pos: jax.Array) -> jax.Array:
-    """Write one position into a (possibly rolling) cache buffer."""
+    """Write one position per batch row into a (possibly rolling) cache
+    buffer. ``pos`` is a (B,) vector of per-slot clocks, so each row of a
+    continuous batch can sit at a different sequence offset."""
     length = buf.shape[1]
-    slot = pos % length
-    return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+    slot = pos % length  # (B,)
+    rows = jnp.arange(buf.shape[0])
+    return buf.at[rows, slot].set(val[:, 0])
 
 
 def _cache_mask(pos: jax.Array, length: int, window: Optional[int]):
-    """Valid-entry mask for a rolling cache after writing position ``pos``.
-    Entries with index > pos (not yet written) are invalid; for windowed
-    caches every slot is valid once pos >= length."""
-    idx = jnp.arange(length)
-    valid = idx <= pos
+    """Per-slot valid-entry mask for a rolling cache after writing
+    position ``pos[b]`` in row ``b``. Entries with index > pos (not yet
+    written) are invalid; for windowed caches every slot is valid once
+    that row's clock passes the buffer length (wrap-around)."""
+    idx = jnp.arange(length)[None, :]
+    valid = idx <= pos[:, None]
     if window is not None:
-        valid = valid | (pos >= length)
-    return valid  # (length,)
+        valid = valid | (pos >= length)[:, None]
+    return valid  # (B, length)
+
+
+def prefill_kv_cache(
+    kv: Dict, batch: int, max_len: int, cfg: AttentionConfig, dtype=jnp.bfloat16
+) -> Dict:
+    """Scatter full-sequence prefill K/V (or MLA latents) into a fresh
+    decode cache. For rolling (windowed) buffers only the last ``length``
+    positions land, at their wrapped indices — the same layout
+    ``_cache_write`` would have produced stepping token by token."""
+    cache = init_kv_cache(batch, max_len, cfg, dtype)
+    s = next(iter(kv.values())).shape[1]
+    out = {}
+    for name, buf in cache.items():
+        length = buf.shape[1]
+        start = max(0, s - length)
+        idx = jnp.arange(start, s)
+        out[name] = buf.at[:, idx % length].set(
+            kv[name][:, start:].astype(buf.dtype)
+        )
+    return out
 
 
 def decode_attention(
     x: jax.Array,  # (B, 1, d)
     cache: Dict,
-    pos: jax.Array,  # scalar int32 — current position
+    pos: jax.Array,  # (B,) int32 per-slot clocks (scalar broadcasts)
     base: Dict,
     adapters: Optional[Dict],
     cfg: AttentionConfig,
@@ -305,7 +351,8 @@ def decode_attention(
 ) -> Tuple[jax.Array, Dict]:
     a = adapters or {}
     b_ = x.shape[0]
-    positions = jnp.full((b_, 1), pos, jnp.int32)
+    pos = _as_pos_vector(pos, b_)
+    positions = pos[:, None]  # (B, 1)
     if cfg.mla:
         return _mla_decode(x, cache, pos, positions, base, a, cfg, acfg)
     q = L.linear(x, base["q"], a.get("q"), acfg).reshape(
@@ -324,8 +371,8 @@ def decode_attention(
     k = L.apply_rope(k, positions, cfg.rope_theta)
     k_buf = _cache_write(cache["k"], k, pos)
     v_buf = _cache_write(cache["v"], v, pos)
-    valid = _cache_mask(pos, k_buf.shape[1], cfg.window)
-    out = _sdpa(q, k_buf, v_buf, cfg.scale, valid[None, :])
+    valid = _cache_mask(pos, k_buf.shape[1], cfg.window)  # (B, T)
+    out = _sdpa(q, k_buf, v_buf, cfg.scale, valid[:, None, None, None, :])
     y = L.linear(out.reshape(b_, 1, -1), base["o"], a.get("o"), acfg)
     return y, {"k": k_buf, "v": v_buf}
 
@@ -358,7 +405,7 @@ def _mla_decode(x, cache, pos, positions, base, a, cfg: AttentionConfig, acfg):
     )
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
     k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
-    valid = _cache_mask(pos, t, cfg.window)
-    out = _sdpa(q_full, k_full, v, cfg.scale, valid[None, :])
+    valid = _cache_mask(pos, t, cfg.window)  # (B, T)
+    out = _sdpa(q_full, k_full, v, cfg.scale, valid[:, None, None, None, :])
     y = L.linear(out.reshape(b_, 1, -1), base["o"], a.get("o"), acfg)
     return y, {"c_kv": c_buf, "k_rope": r_buf}

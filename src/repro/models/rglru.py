@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.dora import AdapterConfig
 from repro.models import layers as L
-from repro.models.ssm import _causal_conv
+from repro.models.ssm import _causal_conv, conv_tail
 
 _C_FACTOR = 8.0
 _MAX_SQRT_GRADIENT = 1000.0
@@ -107,14 +107,19 @@ def rglru_block(
     adapters: Optional[Dict],
     cfg: RglruConfig,
     acfg: AdapterConfig,
+    *,
+    return_state: bool = False,
 ) -> jax.Array:
     a_ = adapters or {}
-    xb = L.linear(x, base["in_x"], a_.get("in_x"), acfg)
+    xb_raw = L.linear(x, base["in_x"], a_.get("in_x"), acfg)
     yb = jax.nn.gelu(L.linear(x, base["in_y"], a_.get("in_y"), acfg))
-    xb = _causal_conv(xb, base["conv_w"], base["conv_b"])
-    h, _ = _rglru_scan(xb, base, a_, acfg)
+    xb = _causal_conv(xb_raw, base["conv_w"], base["conv_b"])
+    h, h_last = _rglru_scan(xb, base, a_, acfg)
     merged = h.astype(x.dtype) * yb
-    return L.linear(merged, base["out"], a_.get("out"), acfg)
+    out = L.linear(merged, base["out"], a_.get("out"), acfg)
+    if return_state:
+        return out, {"h": h_last, "conv": conv_tail(xb_raw, cfg.conv_kernel)}
+    return out
 
 
 # ---------------------------------------------------------------------------

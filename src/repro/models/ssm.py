@@ -171,24 +171,44 @@ def selective_scan(
     return y, h_fin
 
 
+def conv_tail(x: jax.Array, kernel: int, dtype=jnp.float32) -> jax.Array:
+    """Last ``kernel - 1`` positions of a conv-branch input (zero-padded
+    on the left for short sequences) — the rolling conv window a decode
+    cache carries after a full-sequence prefill."""
+    k = kernel - 1
+    b, s, c = x.shape
+    if s >= k:
+        tail = x[:, s - k :]
+    else:
+        tail = jnp.concatenate(
+            [jnp.zeros((b, k - s, c), x.dtype), x], axis=1
+        )
+    return tail.astype(dtype)
+
+
 def ssm_block(
     x: jax.Array,  # (B, S, d_model)
     base: Dict,
     adapters: Optional[Dict],
     cfg: SsmConfig,
     acfg: AdapterConfig,
+    *,
+    return_state: bool = False,
 ) -> jax.Array:
     a = adapters or {}
     xz = L.linear(x, base["in_proj"], a.get("in_proj"), acfg)
-    xs, z = jnp.split(xz, 2, axis=-1)
-    xs = _causal_conv(xs, base["conv_w"], base["conv_b"])
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = _causal_conv(xs_raw, base["conv_w"], base["conv_b"])
     xs = jax.nn.silu(xs)
     dt, b_sel, c_sel = _ssm_params(xs, base, a, cfg, acfg)
-    y, _ = selective_scan(
+    y, h_fin = selective_scan(
         xs, dt, base["a_log"], b_sel, c_sel, base["d_skip"], cfg.chunk
     )
     y = (y.astype(x.dtype)) * jax.nn.silu(z)
-    return L.linear(y, base["out_proj"], a.get("out_proj"), acfg)
+    out = L.linear(y, base["out_proj"], a.get("out_proj"), acfg)
+    if return_state:
+        return out, {"h": h_fin, "conv": conv_tail(xs_raw, cfg.conv_kernel)}
+    return out
 
 
 # ---------------------------------------------------------------------------

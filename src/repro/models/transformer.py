@@ -15,7 +15,6 @@ norms/embeddings are digital peripherals (see DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -391,14 +390,6 @@ def _lm_head(h, base, adapters, cfg: ModelConfig):
     return L.linear(h, base["lm_head"], adapters.get("lm_head"), cfg.adapter)
 
 
-def _none_like(tree):
-    """Adapter tree of the same *container* shape but with empty leaf dicts,
-    so teacher paths skip side-cars. Lists/dicts preserved; stacked arrays
-    in scan bodies are passed through (ignored when adapters dict is falsy
-    at the layer level — we instead map to {})."""
-    return jax.tree_util.tree_map(lambda x: x, _empty_adapters(tree))
-
-
 def _empty_adapters(tree):
     if isinstance(tree, dict):
         return {k: _empty_adapters(v) for k, v in tree.items() if isinstance(v, (dict, list))}
@@ -565,6 +556,132 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> 
     return cache
 
 
+def write_cache_slot(cache: Dict, one: Dict, slot: int) -> Dict:
+    """Copy a single-request (batch=1) cache into row ``slot`` of a
+    batched cache — slot admission in the continuous-batching engine.
+    Buffer extents must match (build ``one`` with the engine's
+    ``max_len``). Handles the stacked scan-body leaves (batch is axis 1
+    behind the group axis) and the unstacked prologue/epilogue lists."""
+    new: Dict = {}
+    for k, v in cache.items():
+        if k == "body":
+            new[k] = jax.tree_util.tree_map(
+                lambda big, o: big.at[:, slot].set(o[:, 0]), v, one[k]
+            )
+        else:
+            new[k] = jax.tree_util.tree_map(
+                lambda big, o: big.at[slot].set(o[0]), v, one[k]
+            )
+    return new
+
+
+def _prefill_block(
+    h, b, a_, cfg: ModelConfig, mixer: str, ffn: str, *,
+    positions, max_len: int, enc_out=None,
+):
+    """``block_forward`` that also emits the layer's decode cache: K/V
+    (post-rope) scattered at positions [0, s), MLA latents, or the
+    recurrent state + conv window after the last position."""
+    a_ = a_ or {}
+    x = _norm(h, b["norm1"], cfg)
+    if mixer in ("attn", "local", "swa"):
+        acfg = _attn_cfg(cfg, mixer)
+        mix, kv = A.attention(
+            x, b["mixer"], a_.get("mixer"), acfg, cfg.adapter,
+            positions=positions, return_kv=True,
+        )
+        layer_cache = A.prefill_kv_cache(
+            kv, h.shape[0], max_len, acfg, cfg.dtype
+        )
+    elif mixer == "ssm":
+        mix, layer_cache = S.ssm_block(
+            x, b["mixer"], a_.get("mixer"), cfg.ssm, cfg.adapter,
+            return_state=True,
+        )
+    elif mixer == "rglru":
+        mix, layer_cache = R.rglru_block(
+            x, b["mixer"], a_.get("mixer"), cfg.rglru, cfg.adapter,
+            return_state=True,
+        )
+    else:
+        raise ValueError(mixer)
+    h = h + mix
+    if "xattn" in b and enc_out is not None:
+        x = _norm(h, b["norm_x"], cfg)
+        h = h + A.attention(
+            x, b["xattn"], a_.get("xattn"),
+            _attn_cfg(cfg, "attn", cross=True), cfg.adapter, kv_input=enc_out,
+        )
+    if ffn in ("mlp", "moe"):
+        x = _norm(h, b["norm2"], cfg)
+        if ffn == "mlp":
+            h = h + L.mlp(x, b["ffn"], a_.get("ffn"), cfg.mlp, cfg.adapter)
+        else:
+            h = h + M.moe_block(x, b["ffn"], a_.get("ffn"), cfg.moe, cfg.adapter)
+    return h, layer_cache
+
+
+def prefill(
+    params: Dict,
+    tokens: jax.Array,  # (B, S) int32
+    cfg: ModelConfig,
+    max_len: int,
+    enc_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Fused full-sequence prefill: ONE forward pass over the whole
+    prompt that returns the last-position logits ``(B, 1, vocab)`` and a
+    decode cache ready for ``decode_step`` at ``pos = S`` — K/V (and MLA
+    latents / recurrent states) are computed batched over the sequence
+    and scattered into each buffer, instead of S per-token decode steps
+    (the old serving loop). Parity: tests/test_engine.py."""
+    base, adapters = params["base"], params["adapters"]
+    if not adapters:
+        adapters = _empty_adapters(base)
+    b, s = tokens.shape
+    h = L.embed(tokens, base["embed"], scale_by_sqrt_dim=cfg.embed_scale)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(base, adapters, enc_embeds.astype(h.dtype), cfg)
+    positions = jnp.arange(s)[None]
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    cache: Dict = {"prologue": [], "epilogue": []}
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+
+    def run(h, b_, a_, kind):
+        return _prefill_block(
+            h, b_, a_, cfg, *kind, positions=positions, max_len=max_len,
+            enc_out=enc_out,
+        )
+
+    for i in range(pro):
+        h, c = run(h, base["prologue"][i], adapters["prologue"][i], kinds[i])
+        cache["prologue"].append(c)
+    if n_groups:
+        body_kinds = [kinds[pro + j] for j in range(p)]
+
+        def group(h, xs):
+            bs, as_ = xs
+            cs = []
+            for j in range(p):
+                h, c = run(h, bs[j], as_[j], body_kinds[j])
+                cs.append(c)
+            return h, cs
+
+        h, body_cache = jax.lax.scan(
+            group, h, (base["body"], adapters.get("body"))
+        )
+        cache["body"] = body_cache
+    for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+        h, c = run(h, base["epilogue"][j], adapters["epilogue"][j], kinds[i])
+        cache["epilogue"].append(c)
+    h = _norm(h, base["final_norm"], cfg)
+    logits = _lm_head(h, base, adapters, cfg)
+    return logits[:, -1:], cache
+
+
 def _decode_block(
     h, cache_l, pos, b, a_, cfg: ModelConfig, mixer: str, ffn: str,
     enc_out=None,
@@ -606,10 +723,15 @@ def decode_step(
     params: Dict,
     cache: Dict,
     tokens: jax.Array,  # (B, 1) int32
-    pos: jax.Array,  # scalar int32
+    pos: jax.Array,  # (B,) int32 per-slot clocks; scalar broadcasts
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, Dict]:
+    """One batched decode tick. ``pos[b]`` is row ``b``'s sequence clock,
+    so a continuous batch can carry requests at different offsets (ragged
+    prompts, staggered admission); attention caches write and mask per
+    slot. SSM/RG-LRU state is per-row already and needs no clock."""
     base, adapters = params["base"], params["adapters"]
+    pos = A._as_pos_vector(pos, tokens.shape[0])
     h = L.embed(
         tokens, base["embed"], scale_by_sqrt_dim=cfg.embed_scale, one_hot=True
     )
@@ -687,11 +809,6 @@ def active_param_fraction(cfg: ModelConfig, params: Dict) -> float:
         return 1.0
     base, _ = count_params(params)
     # routed expert weights
-    def routed_size(tree):
-        total = 0
-        for key in ("gate_w", "up_w", "down_w"):
-            total += _tree_key_size(tree, key)
-        return total
     routed = _tree_key_size(params["base"], "gate_w") + _tree_key_size(
         params["base"], "up_w"
     ) + _tree_key_size(params["base"], "down_w")

@@ -1,0 +1,223 @@
+"""Continuous-batching engine: ragged/staggered bitwise parity with
+per-request ``generate``, the retrace fix (zero recompilations after the
+first call), fused-prefill parity with the per-token loop, and the
+sampling-intent fixes (ISSUE 4 acceptance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.deploy import Deployment, ServeEngine, serving
+from repro.models import transformer as T
+
+
+def _reference(session, prompt, gen_len, temperature=0.0, key=None):
+    """Per-request reference: the single-stream generate loop, one call
+    per prompt (batch 1) — what the engine must reproduce bitwise."""
+    with session.scope():
+        toks, _ = serving.generate(
+            session.params, jnp.asarray(prompt, jnp.int32)[None, :],
+            session.cfg, gen_len=gen_len, temperature=temperature, key=key,
+        )
+    return list(np.asarray(toks)[0])
+
+
+def _ragged_staggered_check(arch, backend, *, max_len, prompt_lens, gen_len,
+                            temperature=0.9):
+    cfg = get_arch(arch).smoke
+    session = Deployment.program(cfg, 0, backend=backend).serve()
+    prompts = [
+        np.asarray(jax.random.randint(
+            jax.random.PRNGKey(50 + i), (n,), 0, cfg.vocab
+        ))
+        for i, n in enumerate(prompt_lens)
+    ]
+    keys = [jax.random.PRNGKey(100 + i) for i in range(len(prompts))]
+    refs = [
+        _reference(session, p, gen_len, temperature, k)
+        for p, k in zip(prompts, keys)
+    ]
+    # fewer slots than requests, admissions at different ticks -> the
+    # engine must interleave rows at different clocks and recycle slots
+    engine = ServeEngine(session, max_slots=2, max_len=max_len)
+    reqs = []
+    for i, (p, k) in enumerate(zip(prompts, keys)):
+        reqs.append(
+            engine.submit(p, max_new=gen_len, temperature=temperature, key=k)
+        )
+        engine.step()
+        engine.step()
+    engine.run()
+    for i, (req, ref) in enumerate(zip(reqs, refs)):
+        assert req.done
+        assert req.tokens == ref, f"request {i}: {req.tokens} != {ref}"
+
+
+@pytest.mark.parametrize("backend", ["dequant", "codes"])
+def test_ragged_staggered_parity_dense(backend):
+    """Engine output is bitwise-identical to N independent generate
+    calls — ragged prompts, staggered admission, both backends."""
+    _ragged_staggered_check(
+        "qwen3_1_7b", backend, max_len=32,
+        prompt_lens=[5, 11, 3], gen_len=6,
+    )
+
+
+@pytest.mark.parametrize("backend", ["dequant", "codes"])
+def test_ragged_parity_sliding_window_wraparound(backend):
+    """mixtral smoke (window 16): prompts + generation cross the rolling
+    buffer boundary, exercising the vectorized per-slot wrap-around in
+    ``_cache_mask``/``_cache_write``."""
+    _ragged_staggered_check(
+        "mixtral_8x22b", backend, max_len=40,
+        prompt_lens=[14, 20], gen_len=8,
+    )
+
+
+def test_ragged_parity_mla():
+    """deepseek-v2 smoke: MLA latent cache (c_kv + shared rope key) on
+    the codes backend."""
+    _ragged_staggered_check(
+        "deepseek_v2_lite_16b", "codes", max_len=32,
+        prompt_lens=[9, 4], gen_len=5,
+    )
+
+
+def test_slot_recycling_and_eos():
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(3), (6,), 0, cfg.vocab)
+    )
+    key = jax.random.PRNGKey(7)
+    ref = _reference(session, prompt, 8, temperature=1.0, key=key)
+    # eos = the first token value whose FIRST occurrence is at index >= 2:
+    # the engine must stop there (token included) and free the slot for
+    # the queued second request
+    j = next(i for i in range(2, len(ref)) if ref[i] not in ref[:i])
+    engine = ServeEngine(session, max_slots=1, max_len=24)
+    r1 = engine.submit(
+        prompt, max_new=8, temperature=1.0, key=key, eos_id=ref[j]
+    )
+    r2 = engine.submit(prompt + 1, max_new=3)
+    assert r2.slot is None and engine.pending  # queued: no free slot
+    engine.run()
+    assert r1.done and r1.tokens == ref[: j + 1]
+    assert r2.done and len(r2.tokens) == 3
+    assert engine.num_active == 0 and not engine.pending
+
+
+def test_second_generate_call_triggers_zero_new_compilations():
+    """The retrace bug: every request used to re-wrap jax.jit and
+    recompile. The registry compiles on the first call only."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (2, 8), 0, cfg.vocab)
+    session.generate(prompt, gen_len=4)
+    with session.scope():
+        warm = serving.compile_count(cfg)
+    assert warm > 0
+    for _ in range(3):
+        session.generate(prompt, gen_len=4)
+    with session.scope():
+        assert serving.compile_count(cfg) == warm
+    # the engine path stays warm too: same-shape resubmission compiles 0
+    engine = ServeEngine(session, max_slots=2, max_len=12)
+    engine.submit(prompt[0], max_new=4)
+    engine.run()
+    warm = engine.compile_count()
+    engine.submit(prompt[0], max_new=4)
+    engine.run()
+    assert engine.compile_count() == warm
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    ["qwen3_1_7b", "falcon_mamba_7b", "recurrentgemma_9b",
+     "deepseek_v2_lite_16b", "mixtral_8x22b"],
+)
+def test_fused_prefill_matches_token_loop(arch_id):
+    """Fused full-sequence prefill == per-token decode_step loop: same
+    last-position logits (up to the SSM associative-vs-sequential scan
+    rounding) and an identical greedy continuation from either cache."""
+    cfg = get_arch(arch_id).smoke
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    p = {"base": params["base"],
+         "adapters": T._empty_adapters(params["adapters"])}
+    s, max_len = 9, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab)
+    cache_l = T.init_cache(cfg, 2, max_len)
+    for i in range(s):
+        logits_l, cache_l = T.decode_step(
+            p, cache_l, toks[:, i : i + 1], jnp.int32(i), cfg
+        )
+    logits_f, cache_f = T.prefill(p, toks, cfg, max_len)
+    np.testing.assert_allclose(
+        np.asarray(logits_l[:, -1], np.float32),
+        np.asarray(logits_f[:, -1], np.float32),
+        rtol=0.15, atol=0.15,
+    )
+    tl = jnp.argmax(logits_l[:, -1], -1)[:, None].astype(jnp.int32)
+    tf = jnp.argmax(logits_f[:, -1], -1)[:, None].astype(jnp.int32)
+    for i in range(4):
+        assert bool((tl == tf).all())
+        logits_l, cache_l = T.decode_step(p, cache_l, tl, jnp.int32(s + i), cfg)
+        logits_f, cache_f = T.decode_step(p, cache_f, tf, jnp.int32(s + i), cfg)
+        tl = jnp.argmax(logits_l[:, -1], -1)[:, None].astype(jnp.int32)
+        tf = jnp.argmax(logits_f[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+def test_vector_pos_matches_scalar_pos():
+    """(B,) per-slot clocks with equal entries == the legacy scalar pos."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    p = {"base": params["base"],
+         "adapters": T._empty_adapters(params["adapters"])}
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab)
+    c1 = T.init_cache(cfg, 2, 8)
+    c2 = T.init_cache(cfg, 2, 8)
+    for i in range(4):
+        l1, c1 = T.decode_step(p, c1, toks[:, i : i + 1], jnp.int32(i), cfg)
+        l2, c2 = T.decode_step(
+            p, c2, toks[:, i : i + 1], jnp.full((2,), i, jnp.int32), cfg
+        )
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_temperature_without_key_samples():
+    """temperature > 0 without a key must sample (deriving a key from
+    the deployment key), not silently argmax."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab)
+    t1, _ = session.generate(prompt, gen_len=2, temperature=8.0)
+    t2, _ = session.generate(prompt, gen_len=2, temperature=8.0)
+    greedy, _ = session.generate(prompt, gen_len=2)
+    # near-uniform sampling: the derived keys differ per call, and at
+    # least one draw differs from the argmax path
+    assert not np.array_equal(t1, t2)
+    assert not (np.array_equal(t1, greedy) and np.array_equal(t2, greedy))
+
+
+def test_key_with_zero_temperature_raises():
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0, cfg.vocab)
+    with pytest.raises(ValueError, match="greedily"):
+        session.generate(prompt, gen_len=2, key=jax.random.PRNGKey(0))
+    engine = ServeEngine(session, max_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="greedily"):
+        engine.submit(prompt[0], max_new=2, key=jax.random.PRNGKey(0))
+
+
+def test_engine_rejects_oversized_request_and_encdec():
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    engine = ServeEngine(session, max_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        engine.submit(np.zeros(6, np.int32), max_new=4)
+    enc_cfg = get_arch("seamless_m4t_large_v2").smoke
+    enc_session = Deployment.program(enc_cfg, 0).serve()
+    with pytest.raises(NotImplementedError):
+        ServeEngine(enc_session)
