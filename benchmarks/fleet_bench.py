@@ -1,0 +1,180 @@
+"""Fleet calibration bench: chips/sec calibrated, batched-vs-per-chip
+speedup, and the per-chip retrace counter (the ISSUE 5 regression
+metric).
+
+Per backend it programs a fleet of N chips plus the N independent
+``Deployment``s the fleet must match, ages everything 24h, then times
+
+  * the per-chip loop — N sequential ``Deployment.calibrate`` calls,
+    each re-tracing its own step and re-running the teacher forward
+    (what the public single-chip API costs today), and
+  * ONE batched ``Fleet.calibrate`` — one shared teacher-feature cache,
+    one vmapped jitted step for the whole fleet,
+
+checks the fleet result is bitwise the per-chip result (per-step losses
+compared chip-by-chip), and re-runs the same-shape fleet calibration to
+pin retraces at zero. Serving two chips afterwards must not grow the
+serving step registry either (compiled steps are per-(cfg, backend),
+not per-chip).
+
+The model config is the CPU-scale smoke config in BOTH modes — the
+subject of this bench is the CHIP axis (--smoke shrinks the fleet, the
+default records the acceptance fleet of 16); absolute times are not
+TPU-representative, the trajectory and the retrace counts are.
+
+Usage:
+    PYTHONPATH=src python benchmarks/fleet_bench.py --smoke \
+        [--out BENCH_fleet.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def bench_backend(
+    arch: str, backend: str, *, chips: int, steps: int, samples: int,
+    seq_len: int, check_speedup: float,
+) -> dict:
+    from repro.configs import get_arch
+    from repro.deploy import Deployment, serving
+    from repro.fleet import Fleet, fleet_compile_count
+
+    cfg = get_arch(arch).smoke
+    fleet = Fleet.program(cfg, 0, n_chips=chips, backend=backend)
+    fleet.advance(24.0)
+    deps = []
+    for i in range(chips):
+        dep = Deployment.program(
+            cfg, (fleet.teacher_key, fleet.chip_key(i)), backend=backend
+        )
+        dep.advance(24.0)
+        deps.append(dep)
+    calib = dict(batch_or_samples=samples, steps=steps, seq_len=seq_len)
+
+    compiles_before = fleet_compile_count(cfg)
+    t0 = time.perf_counter()
+    fleet_report = fleet.calibrate(**calib)
+    fleet_seconds = time.perf_counter() - t0
+    compiles_first = fleet_compile_count(cfg) - compiles_before
+
+    t0 = time.perf_counter()
+    fleet.calibrate(**calib)  # warm: same shapes, zero new compiles
+    fleet_seconds_warm = time.perf_counter() - t0
+    retraces_second_run = fleet_compile_count(cfg) - compiles_before - \
+        compiles_first
+
+    t0 = time.perf_counter()
+    solo_losses = [dep.calibrate(**calib).losses for dep in deps]
+    loop_seconds = time.perf_counter() - t0
+
+    losses_match = all(
+        np.array_equal(
+            np.asarray(solo_losses[i], np.float32), fleet_report.losses[:, i]
+        )
+        for i in range(chips)
+    )
+
+    # serving two chips reuses one compiled decode stack
+    prompt = np.zeros((1, 4), np.int32)
+    s0 = fleet.serve(0)
+    s0.generate(jax.numpy.asarray(prompt), gen_len=3)
+    with s0.scope():
+        warm = serving.compile_count(cfg)
+    fleet.serve(min(1, chips - 1)).generate(jax.numpy.asarray(prompt), gen_len=3)
+    with s0.scope():
+        serve_retraces = serving.compile_count(cfg) - warm
+
+    speedup = loop_seconds / max(fleet_seconds, 1e-9)
+    result = {
+        "chips": chips,
+        "steps": steps,
+        "samples": samples,
+        "per_chip_loop_seconds": round(loop_seconds, 4),
+        "fleet_seconds": round(fleet_seconds, 4),
+        "fleet_seconds_warm": round(fleet_seconds_warm, 4),
+        "speedup_vs_per_chip_loop": round(speedup, 2),
+        "chips_per_sec_loop": round(chips / max(loop_seconds, 1e-9), 3),
+        "chips_per_sec_fleet": round(chips / max(fleet_seconds, 1e-9), 3),
+        "chips_per_sec_fleet_warm": round(
+            chips / max(fleet_seconds_warm, 1e-9), 3
+        ),
+        "fleet_compiles_first_run": compiles_first,
+        "per_chip_retraces_second_run": retraces_second_run,
+        "serve_retraces_second_chip": serve_retraces,
+        "losses_bitwise_match": bool(losses_match),
+        "sram_bytes_per_chip": fleet_report.sram_bytes_per_chip,
+        "calibrated_fraction": round(fleet_report.calibrated_fraction, 6),
+    }
+    violations = []
+    if retraces_second_run != 0:
+        violations.append(f"fleet recalibration retraced {retraces_second_run}x")
+    if serve_retraces != 0:
+        violations.append(f"serving chip 2 retraced {serve_retraces}x")
+    if not losses_match:
+        violations.append("fleet losses diverge from per-chip loop")
+    if check_speedup and speedup < check_speedup:
+        violations.append(
+            f"speedup {speedup:.2f}x < required {check_speedup:.1f}x"
+        )
+    if violations:
+        result["violations"] = violations
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet, fewer steps (CI lane; still fails "
+                         "on any per-chip retrace)")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--backends", default="dequant,codes")
+    ap.add_argument("--chips", type=int, default=None,
+                    help="fleet size (default: 4 smoke / 16 full)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args()
+
+    chips = args.chips or (4 if args.smoke else 16)
+    steps = 2 if args.smoke else 8
+    samples = 4 if args.smoke else 8
+    seq_len = 16 if args.smoke else 32
+    # the >=4x acceptance gate applies to the recorded full-mode run;
+    # the smoke lane only gates retraces/parity (tiny fleets can't
+    # amortize the vmapped compile)
+    check_speedup = 0.0 if args.smoke else 4.0
+
+    result = {
+        "bench": "fleet_calibration",
+        "arch": args.arch,
+        "mode": "smoke" if args.smoke else "full",
+        "backends": {},
+    }
+    failures = 0
+    for backend in args.backends.split(","):
+        try:
+            result["backends"][backend] = bench_backend(
+                args.arch, backend, chips=chips, steps=steps,
+                samples=samples, seq_len=seq_len,
+                check_speedup=check_speedup,
+            )
+        except Exception as e:  # keep the suite going; fail at the end
+            result["backends"][backend] = {"error": repr(e)}
+            failures += 1
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(result, indent=2, sort_keys=True))
+    violated = any(
+        b.get("violations") for b in result["backends"].values()
+        if isinstance(b, dict)
+    )
+    if failures or violated:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -85,31 +85,43 @@ def program_model(
         # zlib.crc32 is stable across processes (builtin hash() is salted,
         # which would break exact recovery-on-restart).
         h = jnp.uint32(zlib.crc32(_path_str(path).encode()))
-        k = jax.random.fold_in(key, h)
-        if x.ndim == 2:
-            if mode == "codes":
-                return rram.programmed_codes(x, cfg, k)
-            return rram.drifted_weights(x, cfg, k, dtype=x.dtype)
-        # stacked weights: (E, d, k) experts or (G, ..., d, k) scan bodies —
-        # program each matrix; drift is i.i.d. so one vmapped call suffices.
-        lead = x.shape[:-2]
-        flat = x.reshape((-1,) + x.shape[-2:])
-        keys = jax.random.split(k, flat.shape[0])
-        if mode == "codes":
-            out = jax.vmap(lambda w, kk: rram.programmed_codes(w, cfg, kk))(
-                flat, keys
-            )
-            return rram.CrossbarWeight(
-                g_pos=out.g_pos.reshape(lead + x.shape[-2:]),
-                g_neg=out.g_neg.reshape(lead + x.shape[-2:]),
-                scale=out.scale.reshape(lead + (1, x.shape[-1])),
-            )
-        out = jax.vmap(
-            lambda w, kk: rram.drifted_weights(w, cfg, kk, dtype=x.dtype)
-        )(flat, keys)
-        return out.reshape(lead + x.shape[-2:])
+        return program_leaf(x, cfg, jax.random.fold_in(key, h), mode=mode)
 
     return jax.tree_util.tree_map_with_path(leaf, base)
+
+
+def program_leaf(
+    w: jax.Array, cfg: RramConfig, key: jax.Array, *, mode: str = "codes"
+):
+    """Program ONE RRAM leaf (its per-leaf key already folded in).
+
+    This is the body ``program_model`` runs per leaf, split out so the
+    fleet subsystem can ``jax.vmap`` it over per-chip keys — N chips'
+    programming events land as ONE stacked draw, bitwise identical per
+    chip to N sequential ``program_model`` calls with the same keys.
+    """
+    if w.ndim == 2:
+        if mode == "codes":
+            return rram.programmed_codes(w, cfg, key)
+        return rram.drifted_weights(w, cfg, key, dtype=w.dtype)
+    # stacked weights: (E, d, k) experts or (G, ..., d, k) scan bodies —
+    # program each matrix; drift is i.i.d. so one vmapped call suffices.
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    keys = jax.random.split(key, flat.shape[0])
+    if mode == "codes":
+        out = jax.vmap(lambda m, kk: rram.programmed_codes(m, cfg, kk))(
+            flat, keys
+        )
+        return rram.CrossbarWeight(
+            g_pos=out.g_pos.reshape(lead + w.shape[-2:]),
+            g_neg=out.g_neg.reshape(lead + w.shape[-2:]),
+            scale=out.scale.reshape(lead + (1, w.shape[-1])),
+        )
+    out = jax.vmap(
+        lambda m, kk: rram.drifted_weights(m, cfg, kk, dtype=w.dtype)
+    )(flat, keys)
+    return out.reshape(lead + w.shape[-2:])
 
 
 def drift_model(
@@ -117,9 +129,10 @@ def drift_model(
     cfg: RramConfig,
     key: jax.Array,
     *,
-    hours: float,
-    event_index: int,
+    hours: Optional[float] = None,
+    event_index,
     clock_offset: float = 0.0,
+    sigma=None,
 ) -> Pytree:
     """One drift-clock tick over a codes-resident model: re-drift every
     resident ``CrossbarWeight`` WITHOUT reprogramming (the array is never
@@ -134,7 +147,14 @@ def drift_model(
     that knows its programming key and the ordered list of elapsed-hour
     events can reproduce the exact post-drift codes from scratch
     (``deploy.Deployment.restore`` relies on this).
+
+    Fleet form: ``sigma`` (overriding ``hours``) and ``event_index`` may
+    be traced scalars, so ``jax.vmap`` over per-chip ``(codes, key,
+    sigma, event_index)`` re-drifts a whole fleet in one dispatch
+    (``fleet.Fleet.advance``).
     """
+    if (hours is None) == (sigma is None):
+        raise ValueError("drift_model needs exactly one of hours= or sigma=")
     n_drifted = 0
 
     def leaf(path, x):
@@ -146,7 +166,7 @@ def drift_model(
         k = jax.random.fold_in(key, h)
         return rram.apply_drift(
             x, cfg, k, hours=hours, clock_offset=clock_offset,
-            event_index=event_index,
+            event_index=event_index, sigma=sigma,
         )
 
     out = jax.tree_util.tree_map_with_path(

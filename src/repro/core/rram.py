@@ -169,7 +169,8 @@ def apply_drift(
     *,
     hours: Optional[float] = None,
     clock_offset: float = 0.0,
-    event_index: Optional[int] = None,
+    event_index=None,
+    sigma=None,
 ) -> CrossbarWeight:
     """Apply Gaussian conductance relaxation drift (eq. 1) to programmed codes.
 
@@ -188,12 +189,20 @@ def apply_drift(
     sliced into ticks — and ``event_index`` folds the event counter into
     ``key`` so each tick draws independent noise while the full history
     stays exactly replayable from the deployment key alone.
+
+    Fleet (vmapped) form: ``sigma`` overrides the hours-based computation
+    and — like ``event_index`` — may be a traced scalar, so a whole fleet
+    of chips drifts in ONE batched call (``jax.vmap`` over per-chip
+    ``(key, sigma, event_index)``). A traced sigma skips the Python-level
+    ``sigma <= 0`` early-out; callers batching over chips pre-filter
+    zero-sigma chips (``fleet.Fleet.advance`` does).
     """
-    sigma = (
-        cfg.relative_drift if hours is None
-        else drift_sigma_increment(cfg, clock_offset, hours)
-    )
-    if sigma <= 0.0:
+    if sigma is None:
+        sigma = (
+            cfg.relative_drift if hours is None
+            else drift_sigma_increment(cfg, clock_offset, hours)
+        )
+    if isinstance(sigma, (int, float)) and sigma <= 0.0:
         return xw
     if event_index is not None:
         key = jax.random.fold_in(key, jnp.uint32(event_index))

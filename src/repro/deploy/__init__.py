@@ -37,6 +37,25 @@ from repro.deploy.serving import (  # noqa: F401
 )
 
 
+# Fleet facade: the multi-chip mirror of Deployment (program / advance /
+# calibrate / serve / snapshot / restore, batched over a chip axis) and
+# its drift-driven recalibration scheduler. Resolved lazily so
+# ``repro.fleet`` (which builds on repro.deploy.deployment) can be
+# imported first without a cycle.
+_FLEET_EXPORTS = (
+    "Fleet", "FleetCalibrationReport", "FleetReport",
+    "RecalibrationScheduler", "fleet_compile_count",
+)
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        import repro.fleet as _fleet
+
+        return getattr(_fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 def resnet_cell(**kwargs):
     """CNN-lifecycle entry (paper §IV Fig. 4/6 protocol): teacher ->
     drift -> calibrate -> evaluate, for the ResNet reproduction. Thin

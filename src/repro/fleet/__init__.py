@@ -1,0 +1,30 @@
+"""Fleet subsystem: N chips, one model, batched pytrees.
+
+    from repro.fleet import Fleet, RecalibrationScheduler
+
+    fleet = Fleet.program(cfg, key=0, n_chips=64, backend="codes")
+    fleet.advance([6 * (i % 5) for i in range(64)])   # heterogeneous aging
+    sched = RecalibrationScheduler(fleet, threshold=0.02,
+                                   calib_args={"steps": 8})
+    report = sched.run([24.0] * 12)    # a year of maintenance ticks
+    print(report.summary())            # recalibrations avoided vs naive
+    session = fleet.serve(chip=7)      # any chip, compiled steps shared
+
+Chip ``i`` is bitwise an independent ``Deployment.program(cfg,
+(fleet.teacher_key, fleet.chip_key(i)))`` at every point of its life —
+the fleet is an execution strategy (one vmapped dispatch, one teacher
+trace, one compile), not a different model.
+"""
+from repro.fleet.fleet import (  # noqa: F401
+    Fleet,
+    FleetCalibrationReport,
+    chip_axes,
+    chip_keys,
+    fleet_compile_count,
+    fleet_program_model,
+)
+from repro.fleet.scheduler import (  # noqa: F401
+    FleetReport,
+    RecalibrationScheduler,
+    TickRecord,
+)

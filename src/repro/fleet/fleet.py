@@ -1,0 +1,710 @@
+"""``Fleet`` — N chips, one model, batched pytrees.
+
+The paper's deployment story at scale: every edge device carries the
+SAME target weights but its own programming noise and its own
+conductance-drift trajectory, and each must be restored with a tiny
+per-chip SRAM adapter rather than RRAM rewrites. ``Deployment`` models
+one such chip; ``Fleet`` models N of them as *batched* pytrees with a
+leading chip axis — not N Python-level deployments:
+
+* ``Fleet.program(cfg, key, n_chips)`` — ONE stacked programming event:
+  every RRAM leaf becomes a ``CrossbarWeight`` with a leading ``(N,
+  ...)`` chip axis (``jax.vmap`` of ``calibrate.program_leaf`` over
+  per-chip keys ``fold_in(program_key, chip)``), while digital
+  peripherals (norms, embeddings) stay SHARED buffers. Bitwise
+  identical per chip to N ``Deployment.program`` calls with the same
+  keys.
+* ``fleet.advance(hours, chips=...)`` — heterogeneous drift clocks:
+  each chip keeps its own ordered event history; a tick re-drifts all
+  affected chips in one vmapped dispatch over per-chip ``(key, sigma,
+  event_index)``. Order-independent ACROSS chips (each chip's draws
+  depend only on its own key and history), order-sensitive within one.
+* ``fleet.calibrate(...)`` — ONE ``jax.vmap``-ed DoRA loop over
+  ``make_cached_calib_step``: the teacher-feature cache is computed once
+  and amortized across the whole fleet (calibrating 64 chips costs one
+  teacher trace), and the jitted step compiles ONCE per fleet shape —
+  zero per-chip retraces (``fleet_compile_count`` pins this).
+* ``fleet.chip(i)`` / ``fleet.serve(i)`` — slice chip ``i`` back out as
+  a plain ``Deployment`` (bitwise: views of the stacked state). Serving
+  reuses the per-``(cfg, backend)`` compiled-step registry, so serving
+  chip 47 after chip 0 compiles nothing.
+* ``fleet.snapshot()`` / ``Fleet.restore()`` — the multi-GB stacked
+  base is never stored; restore replays the programming event and every
+  per-chip drift tick (round-robin over heterogeneous histories) to
+  bitwise equality.
+
+The drift-aware recalibration policy over a fleet lives in
+``fleet/scheduler.py`` (``RecalibrationScheduler`` + ``FleetReport``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import substrate
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import calibrate as C
+from repro.core import rram
+from repro.core.calibrate import (
+    CalibState,
+    make_cached_calib_step,
+    make_calib_step,
+    rram_bytes,
+    sram_bytes,
+    teacher_features,
+)
+from repro.deploy.deployment import (
+    Deployment,
+    _dequant_like,
+    _key_pair,
+    calibration_batch,
+)
+from repro.deploy import serving
+from repro.models import transformer as T
+from repro.optim.adam import AdamW, adamw_init
+
+Pytree = Any
+
+_FLEET_META = "fleet.json"
+
+
+# ---------------------------------------------------------------------------
+# stacked-pytree helpers: RRAM leaves carry the chip axis, peripherals are
+# shared buffers — the same split program_model draws between RRAM and
+# digital leaves.
+# ---------------------------------------------------------------------------
+
+
+def _is_cw(n) -> bool:
+    return isinstance(n, rram.CrossbarWeight)
+
+
+def chip_axes(tree: Pytree) -> Pytree:
+    """Per-leaf vmap axis spec for a fleet-stacked base tree: ``0`` for
+    RRAM leaves (``CrossbarWeight`` or their float read-backs), ``None``
+    for shared digital peripherals. Usable as a ``jax.vmap``
+    in/out_axes prefix."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: 0 if (_is_cw(x) or C._is_rram_leaf(p)) else None,
+        tree, is_leaf=_is_cw,
+    )
+
+
+def _take(tree: Pytree, idx) -> Pytree:
+    """Gather chips ``idx`` (int array -> keeps the chip axis; python int
+    -> drops it) out of a fleet-stacked base tree."""
+
+    def leaf(p, x):
+        if _is_cw(x):
+            return rram.CrossbarWeight(x.g_pos[idx], x.g_neg[idx], x.scale[idx])
+        if C._is_rram_leaf(p):
+            return x[idx]
+        return x
+
+    return jax.tree_util.tree_map_with_path(leaf, tree, is_leaf=_is_cw)
+
+
+def _put(tree: Pytree, idx, sub: Pytree) -> Pytree:
+    """Scatter the gathered-chips subtree ``sub`` back into the stacked
+    tree at rows ``idx``; shared peripherals pass through untouched."""
+
+    def leaf(p, x, s):
+        if _is_cw(x):
+            return rram.CrossbarWeight(
+                x.g_pos.at[idx].set(s.g_pos),
+                x.g_neg.at[idx].set(s.g_neg),
+                x.scale.at[idx].set(s.scale),
+            )
+        if C._is_rram_leaf(p):
+            return x.at[idx].set(s)
+        return x
+
+    return jax.tree_util.tree_map_with_path(leaf, tree, sub, is_leaf=_is_cw)
+
+
+def fleet_program_model(
+    base: Pytree, cfg: rram.RramConfig, chip_keys: jax.Array,
+    *, mode: str = "codes",
+) -> Pytree:
+    """``program_model`` for a whole fleet in one stacked draw: every
+    RRAM leaf is programmed under ``jax.vmap`` over the per-chip keys
+    (per-leaf crc32 path fold exactly as the single-chip path), so chip
+    ``i``'s codes are bitwise ``program_model(base, cfg, chip_keys[i])``.
+    Digital peripherals are returned as the SAME buffers — the fleet
+    shares one copy of norms/embeddings across all chips."""
+
+    def leaf(path, x):
+        if not C._is_rram_leaf(path):
+            return x
+        h = jnp.uint32(zlib.crc32(C._path_str(path).encode()))
+        return jax.vmap(
+            lambda ck: C.program_leaf(
+                x, cfg, jax.random.fold_in(ck, h), mode=mode
+            )
+        )(chip_keys)
+
+    return jax.tree_util.tree_map_with_path(leaf, base)
+
+
+# ---------------------------------------------------------------------------
+# compiled-step registry (mirrors deploy/serving.py): ONE jitted vmapped
+# step per (kind, cfg, opt, trace backend) — the fleet-size axis is a
+# shape handled by jax.jit's argument cache on the SAME callable, which
+# is exactly what makes "calibrate 64 chips" cost one compile, not 64.
+# ---------------------------------------------------------------------------
+
+_FLEET_STEPS: Dict[Tuple, Any] = {}
+
+
+def _registry_get(key: Tuple, build):
+    fn = _FLEET_STEPS.get(key)
+    if fn is None:
+        fn = _FLEET_STEPS[key] = build()
+    return fn
+
+
+def fleet_compile_count(cfg) -> int:
+    """Total compiled-computation count across this cfg's fleet step
+    functions (any kind, any backend). Flat across chips and repeated
+    same-shape calibrations — the per-chip-retrace regression counter
+    (``benchmarks/fleet_bench.py`` fails if a second same-size
+    calibration grows it)."""
+    total = 0
+    for key, fn in _FLEET_STEPS.items():
+        if key[1] != cfg:
+            continue
+        size = getattr(fn, "_cache_size", None)
+        total += size() if callable(size) else 0
+    return total
+
+
+def _calib_step_fn(cfg, opt: AdamW, kind: str, axes: Pytree):
+    """The jitted vmapped calibration step for ``(kind, cfg, opt, active
+    backend)``: chip axis on student base / adapters / optimizer / step,
+    teacher base and batch broadcast."""
+    in_state = CalibState(None, axes, 0, 0, 0)
+    out_state = CalibState(None, axes, 0, 0, 0)
+
+    def build_cached():
+        step = make_cached_calib_step(cfg, opt)
+        return jax.jit(jax.vmap(
+            step, in_axes=(in_state, None, None), out_axes=(out_state, 0)
+        ))
+
+    def build_full():
+        step = make_calib_step(cfg, opt)
+        return jax.jit(jax.vmap(
+            step, in_axes=(in_state, None), out_axes=(out_state, 0)
+        ))
+
+    key = (kind, cfg, opt, substrate.active_backend_name())
+    return _registry_get(key, build_cached if kind == "cached" else build_full)
+
+
+def _logits_fn(cfg, axes: Pytree, use_adapters: bool):
+    """Jitted vmapped student forward -> per-chip f32 logits."""
+
+    def build():
+        def one(base, adapters, batch):
+            return T.forward(
+                {"base": base, "adapters": adapters}, batch, cfg,
+                use_adapters=use_adapters,
+            ).astype(jnp.float32)
+
+        return jax.jit(jax.vmap(
+            one, in_axes=(axes, 0 if use_adapters else None, None)
+        ))
+
+    key = ("logits", cfg, use_adapters, substrate.active_backend_name())
+    return _registry_get(key, build)
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetCalibrationReport:
+    """Outcome of one batched ``Fleet.calibrate`` call."""
+
+    chips: List[int]             # which chips this pass trained
+    losses: np.ndarray           # (steps, len(chips)) per-step feature MSE
+    epochs_run: int
+    sram_bytes: int              # TOTAL fleet side-car bytes (all chips)
+    sram_bytes_per_chip: int
+    rram_bytes: int              # total resident code bytes across the fleet
+    base_params: int             # per-chip logical base params
+    adapter_params: int          # per-chip adapter params
+    calibrated_fraction: float
+    backend: str
+
+    @property
+    def initial_loss(self) -> np.ndarray:
+        return self.losses[0]
+
+    @property
+    def final_loss(self) -> np.ndarray:
+        return self.losses[-1]
+
+    def summary(self) -> str:
+        return (
+            f"calibrated {len(self.chips)} chips x {self.epochs_run} epochs: "
+            f"feature MSE {float(self.initial_loss.mean()):.6f} -> "
+            f"{float(self.final_loss.mean()):.6f} (fleet mean) | "
+            f"sram_bytes/chip={self.sram_bytes_per_chip} "
+            f"({self.calibrated_fraction:.2%} of params) "
+            f"backend={self.backend}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# the fleet
+# ---------------------------------------------------------------------------
+
+
+class Fleet:
+    """N deployments of one model as batched pytrees. See module docstring.
+
+    ``self.codes`` is the stacked ground truth (chip axis on every
+    ``CrossbarWeight``); ``self.base`` is what batched forwards consume
+    (the codes themselves, or the stacked float read-back under
+    ``dequant``). Peripheral leaves are shared single buffers."""
+
+    def __init__(
+        self, cfg, backend: str, teacher_base: Pytree, codes: Pytree,
+        adapters: Pytree, teacher_key: jax.Array, program_key: jax.Array,
+        n_chips: int,
+    ):
+        if backend not in serving.BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; available: {serving.BACKENDS}"
+            )
+        if n_chips < 1:
+            raise ValueError(f"n_chips must be >= 1, got {n_chips}")
+        self.cfg = cfg
+        self.backend = backend
+        self.teacher_base = teacher_base
+        self.codes = codes
+        self.adapters = adapters
+        self.teacher_key = teacher_key
+        self.program_key = program_key
+        self.n_chips = int(n_chips)
+        self.opt_state: Optional[Pytree] = None
+        self.steps: List[int] = [0] * self.n_chips
+        self.drift_hours: List[List[float]] = [[] for _ in range(self.n_chips)]
+        self._refresh_base()
+        self._proxy_ref = self._gamma_norms()
+
+    # -- programming event ---------------------------------------------------
+
+    @classmethod
+    def program(
+        cls, cfg, key=0, n_chips: int = 1, *, backend: str = "dequant",
+    ) -> "Fleet":
+        """One stacked programming event for ``n_chips`` devices sharing
+        the teacher's target weights: chip ``i`` programs under
+        ``fold_in(program_key, i)``, so ``Deployment.program(cfg,
+        (teacher_key, fleet.chip_key(i)))`` reproduces chip ``i``
+        bitwise. Adapters start identical across chips (the teacher
+        init) and diverge only through per-chip calibration."""
+        teacher_key, program_key = _key_pair(key)
+        params = T.init_params(teacher_key, cfg)
+        keys = chip_keys(program_key, n_chips)
+        codes = fleet_program_model(params["base"], cfg.rram, keys)
+        adapters = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_chips), params["adapters"]
+        )
+        return cls(
+            cfg=cfg, backend=backend, teacher_base=params["base"],
+            codes=codes, adapters=adapters, teacher_key=teacher_key,
+            program_key=program_key, n_chips=n_chips,
+        )
+
+    def chip_key(self, i: int) -> jax.Array:
+        """Chip ``i``'s programming key (``fold_in(program_key, i)``) —
+        hand it to ``Deployment.program(cfg, (teacher_key, chip_key))``
+        to rebuild that one chip independently."""
+        return jax.random.fold_in(self.program_key, int(i))
+
+    def _refresh_base(self):
+        if self.backend == "dequant":
+            self.base = _dequant_like(self.codes, self.teacher_base)
+        else:
+            self.base = self.codes
+        self._base_axes = chip_axes(self.base)
+        self._codes_axes = chip_axes(self.codes)
+
+    # -- heterogeneous drift clocks ------------------------------------------
+
+    def field_hours(self, chip: int) -> float:
+        """Chip ``chip``'s total elapsed field time."""
+        return float(sum(self.drift_hours[chip]))
+
+    def _chip_list(self, chips) -> List[int]:
+        if chips is None:
+            return list(range(self.n_chips))
+        out = [int(c) for c in chips]
+        if len(set(out)) != len(out):
+            raise ValueError(f"duplicate chips in {out}")
+        for c in out:
+            if not 0 <= c < self.n_chips:
+                raise ValueError(f"chip {c} out of range [0, {self.n_chips})")
+        return out
+
+    def advance(
+        self, hours: Union[float, Sequence[float]], chips=None,
+    ) -> "Fleet":
+        """Let field time pass on a subset of chips (default: all).
+        ``hours`` is a scalar (same tick everywhere) or a per-chip
+        sequence matching ``chips``. Every affected chip draws its tick
+        from ``(chip_key, event_index, variance increment over ITS own
+        clock)`` — one batched dispatch, yet chip ``i``'s new codes are
+        bitwise what ``Deployment.advance`` would produce, and advancing
+        disjoint chips in any interleaving of calls commutes.
+
+        ``hours=0`` entries are true no-ops (no event recorded);
+        negative hours raise ``ValueError``."""
+        chips = self._chip_list(chips)
+        if isinstance(hours, (int, float)):
+            hlist = [float(hours)] * len(chips)
+        else:
+            hlist = [float(h) for h in hours]
+            if len(hlist) != len(chips):
+                raise ValueError(
+                    f"hours has {len(hlist)} entries for {len(chips)} chips"
+                )
+        for h in hlist:
+            if h < 0:
+                raise ValueError(
+                    f"drift clock cannot run backwards (hours={h})"
+                )
+        active = [(c, h) for c, h in zip(chips, hlist) if h > 0]
+        if not active:
+            return self
+        sigmas = [
+            rram.drift_sigma_increment(self.cfg.rram, self.field_hours(c), h)
+            for c, h in active
+        ]
+        events = [len(self.drift_hours[c]) for c, _ in active]
+        # chips whose tick draws nothing (sigma == 0, e.g. relative_drift
+        # 0) still age — the event is recorded but no noise is drawn,
+        # exactly the single-chip early-out.
+        live = [k for k, s in enumerate(sigmas) if s > 0.0]
+        if live:
+            idx = jnp.asarray([active[k][0] for k in live], jnp.int32)
+            keys = chip_keys(self.program_key, None, idx=idx)
+            sig = jnp.asarray([sigmas[k] for k in live], jnp.float32)
+            ev = jnp.asarray([events[k] for k in live], jnp.uint32)
+            sub = _take(self.codes, idx)
+            drift = jax.vmap(
+                lambda c, k, s, e: C.drift_model(
+                    c, self.cfg.rram, k, sigma=s, event_index=e
+                ),
+                in_axes=(self._codes_axes, 0, 0, 0),
+                out_axes=self._codes_axes,
+            )
+            new = drift(sub, keys, sig, ev)
+            self.codes = _put(self.codes, idx, new)
+            # refresh the read-back for the AFFECTED rows only — a
+            # single-chip tick must not re-dequantize the whole fleet
+            if self.backend == "dequant":
+                self.base = _put(
+                    self.base, idx, _dequant_like(new, self.teacher_base)
+                )
+            else:
+                self.base = self.codes
+        for c, h in active:
+            self.drift_hours[c].append(h)
+        return self
+
+    # -- batched calibration -------------------------------------------------
+
+    def calibrate(
+        self, batch_or_samples: Union[Dict, int] = 10, *,
+        steps: int = 20, lr: float = 1e-3, opt: Optional[AdamW] = None,
+        seq_len: int = 32, chips=None, cached_teacher: Optional[bool] = None,
+    ) -> FleetCalibrationReport:
+        """Algorithm 1 for ``chips`` (default: all) as ONE vmapped loop:
+        the frozen teacher's features are computed once and shared by
+        every chip (the per-chip teacher forward is amortized away), and
+        each jitted step advances all selected chips' adapters together.
+        Chip ``i``'s losses/adapters/optimizer are bitwise what an
+        independent ``Deployment.calibrate`` with the same key and
+        default arguments would produce."""
+        cfg = self.cfg
+        opt = opt if opt is not None else AdamW(lr=lr)
+        chips = self._chip_list(chips)
+        idx = jnp.asarray(chips, jnp.int32)
+        batch = calibration_batch(cfg, batch_or_samples, seq_len)
+        cacheable = not cfg.encoder_layers and not cfg.vision_tokens
+        use_cached = cacheable if cached_teacher is None else (
+            cached_teacher and cacheable
+        )
+        if self.opt_state is None:
+            self.opt_state = jax.vmap(adamw_init)(self.adapters)
+        state = CalibState(
+            self.teacher_base,
+            _take(self.base, idx),
+            jax.tree_util.tree_map(lambda x: x[idx], self.adapters),
+            jax.tree_util.tree_map(lambda x: x[idx], self.opt_state),
+            jnp.asarray([self.steps[c] for c in chips], jnp.int32),
+        )
+        backend_ctx = (
+            substrate.use_backend("dequant")
+            if self.backend != "dequant" else contextlib.nullcontext()
+        )
+        losses: List[np.ndarray] = []
+        with backend_ctx:
+            axes = self._base_axes
+            if use_cached:
+                feats = teacher_features(self.teacher_base, batch, cfg)
+                step_fn = _calib_step_fn(cfg, opt, "cached", axes)
+                run = lambda s: step_fn(s, feats, batch)
+            else:
+                step_fn = _calib_step_fn(cfg, opt, "full", axes)
+                run = lambda s: step_fn(s, batch)
+            for _ in range(steps):
+                state, metrics = run(state)
+                losses.append(np.asarray(metrics["loss"], np.float32))
+        self.adapters = jax.tree_util.tree_map(
+            lambda full, sub: full.at[idx].set(sub),
+            self.adapters, state.adapters,
+        )
+        self.opt_state = jax.tree_util.tree_map(
+            lambda full, sub: full.at[idx].set(sub),
+            self.opt_state, state.opt_state,
+        )
+        new_steps = np.asarray(state.step)
+        for j, c in enumerate(chips):
+            self.steps[c] = int(new_steps[j])
+        # recalibration resets the drift baseline for the chips it touched
+        cur = self._gamma_norms()
+        self._proxy_ref = [
+            ref.at[idx].set(now[idx]) for ref, now in zip(self._proxy_ref, cur)
+        ]
+        n_base, n_adapters = T.count_params(
+            {"base": self.teacher_base,
+             "adapters": jax.tree_util.tree_map(lambda x: x[0], self.adapters)}
+        )
+        total_sram = sram_bytes(self.adapters)
+        return FleetCalibrationReport(
+            chips=chips,
+            losses=np.stack(losses),
+            epochs_run=len(losses),
+            sram_bytes=total_sram,
+            sram_bytes_per_chip=total_sram // self.n_chips,
+            rram_bytes=rram_bytes(self.codes),
+            base_params=n_base,
+            adapter_params=n_adapters,
+            calibrated_fraction=n_adapters / max(n_base, 1),
+            backend=self.backend,
+        )
+
+    # -- drift proxy ---------------------------------------------------------
+
+    def _gamma_norms(self) -> List[jax.Array]:
+        out: List[jax.Array] = []
+
+        def leaf(x):
+            if _is_cw(x):
+                out.append(substrate.code_column_norms(x))
+            return x
+
+        jax.tree_util.tree_map(leaf, self.codes, is_leaf=_is_cw)
+        return out
+
+    def drift_proxy(self) -> np.ndarray:
+        """(n_chips,) forward-free drift signal: mean relative movement
+        of per-layer code column norms since each chip's LAST
+        calibration (or programming). Conductance relaxation perturbs
+        exactly the norms the merged DoRA γ divides by, so this tracks
+        how stale each chip's SRAM compensation has become — at the cost
+        of a read-back reduction, no activations, no matmuls. The
+        ``RecalibrationScheduler`` recalibrates a chip only when this
+        crosses its threshold."""
+        vals = []
+        for now, ref in zip(self._gamma_norms(), self._proxy_ref):
+            rel = jnp.abs(now - ref) / jnp.maximum(jnp.abs(ref), 1e-8)
+            vals.append(jnp.mean(rel.reshape(self.n_chips, -1), axis=1))
+        return np.asarray(jnp.mean(jnp.stack(vals), axis=0))
+
+    def logit_mse(self, batch: Dict, *, use_adapters: bool = True) -> np.ndarray:
+        """(n_chips,) teacher/student logit MSE — the fleet-wide
+        degradation/recovery metric. One teacher forward, one vmapped
+        student forward (codes-resident fleets read back through the
+        differentiable ``dequant`` trace, like calibration)."""
+        t = T.forward(
+            {"base": self.teacher_base, "adapters": {}}, batch, self.cfg,
+            use_adapters=False,
+        ).astype(jnp.float32)
+        backend_ctx = (
+            substrate.use_backend("dequant")
+            if self.backend != "dequant" else contextlib.nullcontext()
+        )
+        with backend_ctx:
+            fn = _logits_fn(self.cfg, self._base_axes, use_adapters)
+            s = fn(self.base, self.adapters if use_adapters else {}, batch)
+        return np.asarray(jnp.mean((s - t[None]) ** 2, axis=tuple(range(1, s.ndim))))
+
+    # -- per-chip extraction / serving ---------------------------------------
+
+    def chip(self, i: int) -> Deployment:
+        """Slice chip ``i`` back out as a plain ``Deployment`` (bitwise:
+        the same codes/adapters/optimizer/history, chip axis dropped).
+        The fleet and the extracted deployment do not alias mutable
+        state — advancing one does not move the other."""
+        i = int(i)
+        if not 0 <= i < self.n_chips:
+            raise ValueError(f"chip {i} out of range [0, {self.n_chips})")
+        dep = Deployment(
+            cfg=self.cfg, backend=self.backend,
+            teacher_base=self.teacher_base,
+            codes=_take(self.codes, i),
+            adapters=jax.tree_util.tree_map(lambda x: x[i], self.adapters),
+            teacher_key=self.teacher_key, program_key=self.chip_key(i),
+        )
+        dep.drift_hours = list(self.drift_hours[i])
+        dep.step = int(self.steps[i])
+        if self.opt_state is not None:
+            dep.opt_state = jax.tree_util.tree_map(
+                lambda x: x[i], self.opt_state
+            )
+        return dep
+
+    def serve(self, chip: int) -> serving.ServeSession:
+        """Serve chip ``chip``. Sessions share the per-``(cfg,
+        backend)`` compiled-step registry, so serving the whole fleet
+        chip-by-chip compiles the decode stack once, not N times."""
+        return self.chip(chip).serve()
+
+    # -- accounting ----------------------------------------------------------
+
+    def sram_bytes(self) -> int:
+        """Total SRAM side-car bytes across the fleet (N x per-chip)."""
+        return sram_bytes(self.adapters)
+
+    def rram_bytes(self) -> int:
+        """Total resident code bytes across the fleet."""
+        return rram_bytes(self.codes)
+
+    # -- persistence ---------------------------------------------------------
+
+    def snapshot(self, directory_or_manager, *, blocking: bool = True) -> int:
+        """Checkpoint the fleet's mutable state: stacked adapters +
+        optimizer, per-chip lifecycle records (keys, heterogeneous drift
+        histories, step counters) and the drift-proxy baselines. The
+        stacked base is NOT stored — restore replays programming and
+        every per-chip drift tick."""
+        manager = (
+            directory_or_manager
+            if isinstance(directory_or_manager, CheckpointManager)
+            else CheckpointManager(str(directory_or_manager))
+        )
+        if self.opt_state is None:
+            self.opt_state = jax.vmap(adamw_init)(self.adapters)
+        # a key that grows with ANY state change (calibration steps OR
+        # drift events on any chip) — max(steps) alone stays flat across
+        # drift-only maintenance ticks and would silently overwrite the
+        # previous snapshot directory
+        counts = [len(h) for h in self.drift_hours]
+        step = int(sum(self.steps) + sum(counts))
+        width = max(counts) if counts else 0
+        padded = np.zeros((self.n_chips, width), np.float64)
+        for c, hs in enumerate(self.drift_hours):
+            padded[c, : len(hs)] = hs
+        lifecycle = {
+            "teacher_key": np.asarray(self.teacher_key),
+            "program_key": np.asarray(self.program_key),
+            "steps": np.asarray(self.steps, np.int64),
+            "drift_hours": padded,
+            "drift_counts": np.asarray(counts, np.int64),
+        }
+        manager.save(
+            step,
+            {"adapters": self.adapters, "opt": self.opt_state,
+             "lifecycle": lifecycle, "proxy_ref": list(self._proxy_ref)},
+            blocking=blocking,
+        )
+        meta = {
+            "format": 1, "backend": self.backend,
+            "arch": getattr(self.cfg, "name", None),
+            "n_chips": self.n_chips,
+        }
+        with open(os.path.join(manager.directory, _FLEET_META), "w") as f:
+            json.dump(meta, f)
+        return step
+
+    @classmethod
+    def restore(
+        cls, cfg, directory, *, step: Optional[int] = None,
+        backend: Optional[str] = None,
+    ) -> "Fleet":
+        """Rebuild a fleet from a snapshot: re-program all chips from
+        the recorded keys, replay every chip's drift history in its own
+        order (heterogeneous histories replay round-robin — chip
+        independence makes cross-chip order irrelevant), then load the
+        stacked adapters/optimizer and proxy baselines. Bitwise equal to
+        the snapshotted fleet."""
+        manager = CheckpointManager(str(directory))
+        if step is None:
+            step = manager.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no snapshots in {directory}")
+        meta_path = os.path.join(manager.directory, _FLEET_META)
+        meta = {}
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+        backend = backend or meta.get("backend", "dequant")
+        life = manager.restore(
+            step,
+            {"lifecycle": {
+                "teacher_key": np.zeros((2,), np.uint32),
+                "program_key": np.zeros((2,), np.uint32),
+                "steps": np.zeros((0,), np.int64),
+                "drift_hours": np.zeros((0, 0), np.float64),
+                "drift_counts": np.zeros((0,), np.int64),
+            }},
+        )["lifecycle"]
+        n_chips = int(meta.get("n_chips", len(life["steps"])))
+        fleet = cls.program(
+            cfg, (life["teacher_key"], life["program_key"]),
+            n_chips=n_chips, backend=backend,
+        )
+        counts = np.asarray(life["drift_counts"], np.int64)
+        padded = np.asarray(life["drift_hours"], np.float64)
+        for r in range(int(counts.max()) if counts.size else 0):
+            chips = [c for c in range(n_chips) if counts[c] > r]
+            fleet.advance([float(padded[c, r]) for c in chips], chips=chips)
+        restored = manager.restore(
+            step,
+            {"adapters": fleet.adapters,
+             "opt": jax.vmap(adamw_init)(fleet.adapters),
+             "proxy_ref": fleet._gamma_norms()},
+        )
+        fleet.adapters = restored["adapters"]
+        fleet.opt_state = restored["opt"]
+        fleet._proxy_ref = [jnp.asarray(x) for x in restored["proxy_ref"]]
+        fleet.steps = [int(s) for s in life["steps"]]
+        return fleet
+
+
+def chip_keys(
+    program_key: jax.Array, n_chips: Optional[int], *, idx=None
+) -> jax.Array:
+    """Stacked per-chip programming keys ``fold_in(program_key, i)`` for
+    ``i in range(n_chips)`` (or the explicit ``idx`` array)."""
+    if idx is None:
+        idx = jnp.arange(n_chips, dtype=jnp.uint32)
+    return jax.vmap(lambda i: jax.random.fold_in(program_key, i))(
+        jnp.asarray(idx, jnp.uint32)
+    )

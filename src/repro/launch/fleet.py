@@ -1,0 +1,82 @@
+"""Fleet maintenance driver: program N chips, run a drift-driven
+recalibration timeline, report the economics.
+
+The single-chip drivers (``launch/train.py``, ``launch/serve.py``) own
+one ``Deployment``; this driver owns a ``repro.fleet.Fleet`` — batched
+per-chip programming noise and heterogeneous drift clocks — and a
+``RecalibrationScheduler`` that recalibrates only the chips whose drift
+proxy crossed the threshold at each maintenance tick.
+
+CPU-scale usage:
+    PYTHONPATH=src python -m repro.launch.fleet --arch qwen3-1.7b --smoke \
+        --chips 8 --ticks 3 --tick-hours 24 --threshold 0.015 \
+        [--backend codes] [--hetero] [--snapshot /ckpt/fleet]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.deploy import BACKENDS
+from repro.fleet import Fleet, RecalibrationScheduler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--chips", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="dequant", choices=BACKENDS)
+    ap.add_argument("--ticks", type=int, default=3,
+                    help="maintenance ticks to simulate")
+    ap.add_argument("--tick-hours", type=float, default=24.0,
+                    help="field hours per tick (scaled per chip if --hetero)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="chip i ages i+1 times faster (heterogeneous clocks)")
+    ap.add_argument("--threshold", type=float, default=0.015,
+                    help="drift-proxy threshold that triggers recalibration")
+    ap.add_argument("--samples", type=int, default=10)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--snapshot", default=None,
+                    help="checkpoint directory for the final fleet state")
+    args = ap.parse_args()
+    arch = get_arch(args.arch)
+    cfg = arch.smoke if args.smoke else arch.full
+
+    fleet = Fleet.program(
+        cfg, args.seed, n_chips=args.chips, backend=args.backend
+    )
+    print(f"programmed fleet of {args.chips} ({args.backend}): "
+          f"rram_bytes={fleet.rram_bytes()} sram_bytes={fleet.sram_bytes()}")
+
+    sched = RecalibrationScheduler(
+        fleet, threshold=args.threshold,
+        calib_args={"batch_or_samples": args.samples, "steps": args.steps,
+                    "lr": args.lr, "seq_len": args.seq_len},
+    )
+    hours = (
+        [args.tick_hours * (i + 1) for i in range(args.chips)]
+        if args.hetero else args.tick_hours
+    )
+    for t in range(args.ticks):
+        rec = sched.tick(hours)
+        print(f"tick {t}: proxy={np.round(rec.proxy, 4).tolist()} "
+              f"recalibrated={rec.recalibrated or 'none'}"
+              + (f" | {rec.report.summary()}" if rec.report else ""))
+
+    report = sched.report()
+    print(report.summary())
+    print(report.to_json())
+
+    if args.snapshot:
+        step = fleet.snapshot(args.snapshot)
+        print(f"fleet snapshot at step {step} -> {args.snapshot}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ from repro.substrate.backends import (  # noqa: F401
     use_backend,
 )
 from repro.substrate.exec import (  # noqa: F401
+    code_column_norms,
     default_interpret,
     dora_gamma,
     rimc_linear,

@@ -35,6 +35,22 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def code_column_norms(xw: CrossbarWeight) -> jax.Array:
+    """Per-output-column L2 norms of the resident codes, read back
+    digitally: shape ``(..., n)`` for codes of shape ``(..., k, n)``.
+
+    Stacked-codes dispatch: the reduction is over the row axis (-2), so
+    ANY leading stacking works unchanged — a fleet's chip axis, expert
+    stacks, scan-group stacks, or combinations. This is the cheap
+    forward-free signal the fleet's drift proxy monitors: conductance
+    relaxation perturbs the very column norms the DoRA merge (Algorithm
+    2 line 12) divides by, so their relative movement since the last
+    calibration tracks how stale the merged γ has become.
+    """
+    w = dequantize(xw)
+    return jnp.sqrt(jnp.sum(w * w, axis=-2))
+
+
 def dora_gamma(xw: CrossbarWeight, adapter: dict) -> jax.Array:
     """Merged DoRA scale M/||W_r + A@B|| (Algorithm 2 line 12), shape (1,N)."""
     w = dequantize(xw)

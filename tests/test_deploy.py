@@ -124,7 +124,11 @@ def test_advance_degrades_agreement_monotonically():
     assert gap0 < gap1 < gap2
 
 
-def test_advance_zero_hours_is_identity():
+def test_advance_zero_hours_is_noop_and_negative_raises():
+    """hours=0 is a TRUE no-op — no drift event is recorded (it used to
+    append a zero-hour event that consumed an event index, shifting the
+    keys of every later tick); negative hours are rejected instead of
+    passing silently through the drift model."""
     cfg = _cfg()
     dep = Deployment.program(cfg, 0, backend="codes")
     ref = jax.tree_util.tree_map(
@@ -133,7 +137,17 @@ def test_advance_zero_hours_is_identity():
     )
     dep.advance(0.0)
     _assert_trees_equal(ref, dep.codes)
-    assert dep.drift_hours == [0.0]  # the event still counts
+    assert dep.drift_hours == []  # no event recorded
+    with pytest.raises(ValueError):
+        dep.advance(-1.0)
+    assert dep.drift_hours == []
+    # a zero tick between real ticks does not perturb the event stream:
+    # [24] and [0, 24, 0] replay to the same codes
+    d1 = Deployment.program(cfg, 0, backend="codes").advance(24.0)
+    d2 = Deployment.program(cfg, 0, backend="codes")
+    d2.advance(0.0); d2.advance(24.0); d2.advance(0.0)
+    _assert_trees_equal(d1.codes, d2.codes)
+    assert d1.drift_hours == d2.drift_hours == [24.0]
 
 
 def test_drift_sigma_log_time():
@@ -195,6 +209,24 @@ def test_snapshot_restore_reproduces_post_drift_post_calib_state(tmp_path):
     l1, _ = dep.serve().prefill(prompt, 6)
     l2, _ = restored.serve().prefill(prompt, 6)
     np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_restore_replays_legacy_zero_hour_events(tmp_path):
+    """Snapshots written before advance(0) became a no-op can contain
+    recorded zero-hour events that consumed an event index; restore must
+    replay that index consumption (not skip it) so later ticks draw the
+    same per-event keys."""
+    cfg = _cfg()
+    dep = Deployment.program(cfg, 0, backend="codes")
+    # simulate the legacy state: a zero-hour event on the record, codes
+    # untouched (exactly what the old advance(0.0) did), then a real tick
+    # drawing under event_index 1
+    dep.drift_hours.append(0.0)
+    dep.advance(24.0)
+    dep.snapshot(str(tmp_path))
+    restored = Deployment.restore(cfg, str(tmp_path))
+    assert restored.drift_hours == [0.0, 24.0]
+    _assert_trees_equal(dep.codes, restored.codes)
 
 
 def test_restore_backend_override(tmp_path):

@@ -1,0 +1,297 @@
+"""Fleet subsystem: batched multi-chip programming/drift/calibration is
+bitwise-identical to N independent ``Deployment`` runs, heterogeneous
+drift clocks commute across chips, the recalibration scheduler fires iff
+the drift proxy crosses its threshold, snapshot/restore replays exactly,
+and the batched path never retraces per chip (ISSUE 5 acceptance)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import rram
+from repro.deploy import Deployment, serving
+from repro.fleet import (
+    Fleet,
+    RecalibrationScheduler,
+    chip_keys,
+    fleet_compile_count,
+)
+
+
+def _cfg():
+    return get_arch("qwen3_1_7b").smoke
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )
+
+
+def _assert_trees_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb) and len(la) > 0
+    for x, y in zip(la, lb):
+        if isinstance(x, rram.CrossbarWeight):
+            assert isinstance(y, rram.CrossbarWeight)
+            np.testing.assert_array_equal(np.asarray(x.g_pos), np.asarray(y.g_pos))
+            np.testing.assert_array_equal(np.asarray(x.g_neg), np.asarray(y.g_neg))
+            np.testing.assert_array_equal(np.asarray(x.scale), np.asarray(y.scale))
+        else:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _solo_deployments(fleet, backend):
+    """The N independent single-chip deployments fleet chip i must match."""
+    return [
+        Deployment.program(
+            fleet.cfg, (fleet.teacher_key, fleet.chip_key(i)), backend=backend
+        )
+        for i in range(fleet.n_chips)
+    ]
+
+
+# -- batched programming and calibration vs N Deployments --------------------
+
+
+@pytest.mark.parametrize("backend", ["dequant", "codes"])
+def test_fleet_calibration_bitwise_matches_independent_deployments(backend):
+    """The headline contract: program + drift + ONE vmapped calibration
+    over the fleet == N independent Deployment lifecycles with the same
+    per-chip keys, bitwise (codes, per-step losses, adapters, optimizer
+    state)."""
+    cfg = _cfg()
+    n = 3
+    fleet = Fleet.program(cfg, 0, n_chips=n, backend=backend)
+    deps = _solo_deployments(fleet, backend)
+
+    for i in range(n):
+        _assert_trees_equal(deps[i].codes, fleet.chip(i).codes)
+        _assert_trees_equal(deps[i].base, fleet.chip(i).base)
+
+    hours = [24.0, 168.0, 6.0]  # heterogeneous aging before calibration
+    fleet.advance(hours)
+    for dep, h in zip(deps, hours):
+        dep.advance(h)
+
+    report = fleet.calibrate(4, steps=3, seq_len=16)
+    assert report.losses.shape == (3, n)
+    for i, dep in enumerate(deps):
+        solo = dep.calibrate(4, steps=3, seq_len=16)
+        np.testing.assert_array_equal(
+            np.asarray(solo.losses, np.float32), report.losses[:, i]
+        )
+        chip = fleet.chip(i)
+        _assert_trees_equal(dep.adapters, chip.adapters)
+        _assert_trees_equal(dep.opt_state, chip.opt_state)
+        assert chip.step == dep.step
+        assert chip.drift_hours == dep.drift_hours
+
+    # and the served artifact matches chip-by-chip
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0, cfg.vocab)
+    for i in (0, n - 1):
+        l_solo, _ = deps[i].serve().prefill(prompt, 7)
+        l_fleet, _ = fleet.serve(i).prefill(prompt, 7)
+        np.testing.assert_array_equal(np.asarray(l_solo), np.asarray(l_fleet))
+
+
+def test_fleet_shares_teacher_and_peripherals():
+    """Digital peripherals are SHARED buffers (one copy fleet-wide);
+    only RRAM leaves carry the chip axis."""
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=4)
+    emb = fleet.base["embed"]["embedding"]
+    assert emb is fleet.teacher_base["embed"]["embedding"]  # not a copy
+    # RRAM leaves are stacked with the chip axis (leading the scan-group
+    # axis for body layers)
+    w = fleet.codes["body"][0]["mixer"]["q"]["w"]
+    assert isinstance(w, rram.CrossbarWeight)
+    assert w.g_pos.shape[0] == 4
+
+
+def test_chip_keys_match_fold_in():
+    key = jax.random.PRNGKey(3)
+    ks = chip_keys(key, 5)
+    for i in range(5):
+        np.testing.assert_array_equal(
+            np.asarray(ks[i]), np.asarray(jax.random.fold_in(key, i))
+        )
+
+
+# -- heterogeneous drift clocks ----------------------------------------------
+
+
+def test_heterogeneous_clocks_deterministic_and_order_independent():
+    """Per-chip histories are what matter, not the order chips were
+    advanced in: any interleaving of calls that gives every chip the
+    same ordered event list lands on identical state."""
+    cfg = _cfg()
+    a = Fleet.program(cfg, 0, n_chips=3, backend="codes")
+    b = Fleet.program(cfg, 0, n_chips=3, backend="codes")
+
+    # a: one batched heterogeneous call, then a second tick for chip 1
+    a.advance([24.0, 48.0, 6.0])
+    a.advance(12.0, chips=[1])
+    # b: same per-chip histories via a completely different interleaving
+    b.advance(6.0, chips=[2])
+    b.advance(48.0, chips=[1])
+    b.advance(12.0, chips=[1])
+    b.advance(24.0, chips=[0])
+
+    assert a.drift_hours == b.drift_hours == [[24.0], [48.0, 12.0], [6.0]]
+    _assert_trees_equal(a.codes, b.codes)
+
+    # determinism: replaying the same calls reproduces the same state
+    c = Fleet.program(cfg, 0, n_chips=3, backend="codes")
+    c.advance([24.0, 48.0, 6.0])
+    c.advance(12.0, chips=[1])
+    _assert_trees_equal(a.codes, c.codes)
+
+
+def test_fleet_advance_validation():
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=2)
+    ref = fleet.chip(0).codes
+    with pytest.raises(ValueError):
+        fleet.advance(-1.0)
+    with pytest.raises(ValueError):
+        fleet.advance([1.0], chips=[0, 1])  # length mismatch
+    with pytest.raises(ValueError):
+        fleet.advance(1.0, chips=[0, 0])  # duplicate
+    with pytest.raises(ValueError):
+        fleet.advance(1.0, chips=[5])  # out of range
+    # zero hours: true no-op, no event recorded
+    fleet.advance(0.0)
+    fleet.advance([0.0, 0.0])
+    assert fleet.drift_hours == [[], []]
+    _assert_trees_equal(ref, fleet.chip(0).codes)
+
+
+# -- recalibration scheduler -------------------------------------------------
+
+
+def test_scheduler_fires_iff_proxy_crosses_threshold():
+    """The scheduler recalibrates exactly the chips whose drift proxy
+    exceeds the threshold — aged chips fire, fresh chips don't, and a
+    just-recalibrated chip's proxy resets below threshold."""
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=4)
+    sched = RecalibrationScheduler(
+        fleet, threshold=0.01,
+        calib_args={"batch_or_samples": 4, "steps": 2, "seq_len": 16},
+    )
+    # chips 0/1 age hard, chips 2/3 barely
+    rec = sched.tick([300.0, 300.0, 0.5, 0.5])
+    over = set(int(c) for c in np.flatnonzero(rec.proxy > 0.01))
+    assert set(rec.recalibrated) == over == {0, 1}
+    assert rec.report is not None and rec.report.chips == [0, 1]
+
+    # a tiny follow-up tick: nobody (incl. the recalibrated) crosses
+    rec2 = sched.tick(0.25)
+    assert rec2.recalibrated == []
+    assert np.all(rec2.proxy <= 0.01)
+    assert rec2.report is None
+
+    # the economics: 2 triggered vs 8 naive fixed-interval
+    report = sched.report()
+    assert report.recalibrations == 2
+    assert report.naive_recalibrations == 8
+    assert report.recalibrations_avoided == 6
+    assert report.per_chip_recalibrations == [1, 1, 0, 0]
+    assert report.sram_lifespan_calibrations > report.rram_lifespan_calibrations
+    assert "avoided" in report.summary()
+
+
+def test_scheduler_rejects_nonpositive_threshold():
+    fleet = Fleet.program(_cfg(), 0, n_chips=1)
+    with pytest.raises(ValueError):
+        RecalibrationScheduler(fleet, threshold=0.0)
+
+
+def test_drift_proxy_zero_after_program_and_grows_with_age():
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=2)
+    np.testing.assert_array_equal(fleet.drift_proxy(), np.zeros(2))
+    fleet.advance([100.0, 0.0])
+    p = fleet.drift_proxy()
+    assert p[0] > 0 and p[1] == 0
+
+
+# -- snapshot / restore ------------------------------------------------------
+
+
+def test_fleet_snapshot_restore_replays_to_exact_equality(tmp_path):
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=3, backend="codes")
+    fleet.advance([24.0, 168.0, 6.0])
+    fleet.calibrate(4, steps=2, seq_len=16, chips=[0, 2])
+    fleet.advance(12.0, chips=[1])
+    step = fleet.snapshot(str(tmp_path))
+
+    restored = Fleet.restore(cfg, str(tmp_path))
+    assert restored.backend == "codes"
+    assert restored.n_chips == 3
+    assert restored.steps == fleet.steps == [2, 0, 2]
+    assert restored.drift_hours == fleet.drift_hours
+    _assert_trees_equal(fleet.codes, restored.codes)
+    _assert_trees_equal(fleet.adapters, restored.adapters)
+    _assert_trees_equal(fleet.opt_state, restored.opt_state)
+    for a, b in zip(fleet._proxy_ref, restored._proxy_ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(fleet.drift_proxy(), restored.drift_proxy())
+    # snapshot key = total calibration steps + total drift events, so a
+    # drift-only maintenance tick still produces a NEW snapshot instead
+    # of overwriting the previous one
+    assert step == sum(fleet.steps) + sum(len(h) for h in fleet.drift_hours)
+    fleet.advance(1.0, chips=[0])
+    step2 = fleet.snapshot(str(tmp_path))
+    assert step2 == step + 1
+
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (1, 4), 0, cfg.vocab)
+    l1, _ = fleet.serve(1).prefill(prompt, 6)
+    l2, _ = restored.serve(1).prefill(prompt, 6)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# -- zero per-chip retraces (extends the PR 3 guarantee) ---------------------
+
+
+def test_fleet_calibrate_and_serve_do_not_retrace_per_chip():
+    """Compile counts must scale with SHAPES, not with chips: one fleet
+    calibration compiles one vmapped step regardless of fleet size, a
+    repeat same-size calibration compiles nothing new, and serving chip
+    after chip reuses the per-(cfg, backend) serving steps."""
+    cfg = _cfg()
+    n = 3
+    fleet = Fleet.program(cfg, 0, n_chips=n, backend="codes")
+    fleet.advance(24.0)
+
+    # lr=2e-3 forces a registry entry other tests haven't warmed, so the
+    # compile deltas below are exactly this test's
+    base = fleet_compile_count(cfg)
+    fleet.calibrate(4, steps=3, seq_len=16, lr=2e-3)
+    after_first = fleet_compile_count(cfg)
+    assert after_first == base + 1  # ONE compiled step for the whole fleet
+
+    fleet.calibrate(4, steps=3, seq_len=16, lr=2e-3)  # same shapes: no
+    assert fleet_compile_count(cfg) == after_first    # new compile
+
+    # a different chip-subset size is a new SHAPE (one compile), still
+    # not per-chip
+    fleet.calibrate(4, steps=2, seq_len=16, lr=2e-3, chips=[0, 1])
+    assert fleet_compile_count(cfg) == after_first + 1
+
+    # serving: chip 0 warms the (cfg, backend) registry; every further
+    # chip reuses it
+    prompt = jnp.zeros((1, 4), jnp.int32)
+    s0 = fleet.serve(0)
+    s0.generate(prompt, gen_len=3)
+    with s0.scope():
+        warm = serving.compile_count(cfg)
+    assert warm > 0
+    for i in range(1, n):
+        fleet.serve(i).generate(prompt, gen_len=3)
+    with s0.scope():
+        assert serving.compile_count(cfg) == warm

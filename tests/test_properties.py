@@ -45,6 +45,29 @@ def test_dora_init_always_output_preserving(d, k, r, seed):
     )
 
 
+@settings(max_examples=40, deadline=None)
+@given(
+    ticks=st.lists(st.floats(0.0, 96.0), min_size=1, max_size=10),
+    drift=st.floats(0.01, 0.3),
+)
+def test_drift_increment_partition_invariance(ticks, drift):
+    """Slicing a drift timeline into ANY tick partition accumulates the
+    same total variance as one fused tick: independent Gaussian
+    increments add in variance, so sum(increment^2) over an arbitrary
+    partition of [0, T] equals drift_sigma(T)^2 — the invariant the
+    fleet's heterogeneous per-chip clocks rely on."""
+    cfg = rram.RramConfig(relative_drift=drift)
+    total_hours, var, t = sum(ticks), 0.0, 0.0
+    for h in ticks:
+        inc = rram.drift_sigma_increment(cfg, t, h)
+        var += inc * inc
+        t += h
+    np.testing.assert_allclose(
+        np.sqrt(var), rram.drift_sigma(cfg, total_hours),
+        rtol=1e-6, atol=1e-9,
+    )
+
+
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2 ** 16), drift=st.floats(0.01, 0.3))
 def test_drift_preserves_shape_and_range(seed, drift):
