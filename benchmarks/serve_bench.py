@@ -10,11 +10,20 @@ retrace regression (``recompiles_second_wave`` should be 0).
 On this CPU container the codes backend runs its Pallas kernel in
 interpret mode, so absolute wall-times are not TPU-representative; the
 numbers that track the serving story are the retrace count, TTFT vs
-decode split, and their trajectory over PRs.
+decode split, the codes/dequant decode ratio, and their trajectory over
+PRs.
+
+Regression gates (exit 1):
+  * any backend errors, or recompiles in the second (same-shape) wave,
+  * ``compile_count_warm`` differs between codes and dequant (the
+    registry-key collision bug made codes compile 2x),
+  * codes decode tok/s falls below ``--codes-floor`` x dequant's (the
+    ISSUE 6 fast-path ratchet; the committed BENCH_serve.json shows the
+    ratio at or above 1.0).
 
 Usage:
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
-        [--out BENCH_serve.json]
+        [--out BENCH_serve.json] [--codes-floor 0.9]
 """
 from __future__ import annotations
 
@@ -80,6 +89,12 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--backends", default="dequant,codes")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument(
+        "--codes-floor", type=float, default=0.9,
+        help="min acceptable codes/dequant decode tok/s ratio (gate; "
+        "slack below 1.0 absorbs CI timer noise — the committed "
+        "BENCH_serve.json is regenerated at >= 1.0)",
+    )
     args = ap.parse_args()
 
     result = {
@@ -97,15 +112,40 @@ def main() -> None:
         except Exception as e:  # keep the suite going; fail at the end
             result["backends"][backend] = {"error": repr(e)}
             failures += 1
+    backends = result["backends"]
+    codes, dequant = backends.get("codes"), backends.get("dequant")
+    gate_msgs = []
+    if (
+        isinstance(codes, dict) and isinstance(dequant, dict)
+        and "decode_tok_per_s" in codes and "decode_tok_per_s" in dequant
+    ):
+        ratio = codes["decode_tok_per_s"] / max(
+            dequant["decode_tok_per_s"], 1e-9
+        )
+        result["codes_vs_dequant_tok_ratio"] = round(ratio, 3)
+        result["codes_floor"] = args.codes_floor
+        if ratio < args.codes_floor:
+            gate_msgs.append(
+                f"codes/dequant decode ratio {ratio:.3f} below the "
+                f"{args.codes_floor:.2f} floor"
+            )
+        if codes["compile_count_warm"] != dequant["compile_count_warm"]:
+            gate_msgs.append(
+                "compile_count_warm mismatch: codes="
+                f"{codes['compile_count_warm']} "
+                f"dequant={dequant['compile_count_warm']}"
+            )
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
         f.write("\n")
     print(json.dumps(result, indent=2, sort_keys=True))
     retraces = [
-        b.get("recompiles_second_wave") for b in result["backends"].values()
+        b.get("recompiles_second_wave") for b in backends.values()
         if isinstance(b, dict) and "recompiles_second_wave" in b
     ]
-    if failures or any(r != 0 for r in retraces):
+    for msg in gate_msgs:
+        print(f"FAIL: {msg}")
+    if failures or any(r != 0 for r in retraces) or gate_msgs:
         raise SystemExit(1)
 
 

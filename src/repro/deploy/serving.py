@@ -20,7 +20,6 @@ The continuous-batching engine over these steps lives in
 """
 from __future__ import annotations
 
-import contextlib
 import time
 from typing import Dict, Optional, Tuple
 
@@ -33,22 +32,27 @@ from repro import substrate
 BACKENDS = ("dequant", "codes", "codes_adc")
 
 
-def backend_scope(backend: str, cfg=None):
+def backend_scope(backend: str, cfg=None, **options):
     """Context manager binding the substrate backend for trace time.
+
+    EVERY backend binds explicitly — including ``dequant``. It used to
+    return a nullcontext, which left the ambient default ("codes")
+    active: the step registry below then keyed dequant and codes traces
+    identically and both backends shared one jitted callable, doubling
+    the warm compile count on the codes path. Binding makes the
+    registry key (via ``substrate.active_backend_key``) honest.
 
     Substrate-aware scoping: passing the model config plumbs its
     ``RramConfig`` into the ADC-faithful backend automatically
     (``code_max``/``adc_bits`` must match the programmed deployment —
     ``ServeSession`` always passes its deployment's config, so sessions
-    never serve with a mismatched ADC).
+    never serve with a mismatched ADC). Extra ``options`` (e.g.
+    ``accum="int8"``) forward to the backend's ``linear``.
     """
-    if backend == "dequant":
-        return contextlib.nullcontext()
     if backend == "codes_adc" and cfg is not None:
-        return substrate.use_backend(
-            backend, code_max=cfg.rram.code_max, adc_bits=cfg.rram.adc_bits
-        )
-    return substrate.use_backend(backend)
+        options.setdefault("code_max", cfg.rram.code_max)
+        options.setdefault("adc_bits", cfg.rram.adc_bits)
+    return substrate.use_backend(backend, **options)
 
 
 # ---------------------------------------------------------------------------
@@ -57,16 +61,18 @@ def backend_scope(backend: str, cfg=None):
 #
 # The substrate backend is read at TRACE time (substrate.use_backend), so
 # a jitted step is only reusable under the backend it was traced with —
-# the registry key is (cfg, active backend name). Shape variation within
-# one entry (batch size, prompt length) is handled by jax.jit's own
-# argument cache on the SAME callable, which is exactly what rebuilding
-# the lambda per call threw away.
+# the registry key is (cfg, active backend identity). The identity
+# includes the backend OPTIONS, not just the name: ``accum="int8"`` and
+# f32 trace to different programs under the same name. Shape variation
+# within one entry (batch size, prompt length) is handled by jax.jit's
+# own argument cache on the SAME callable, which is exactly what
+# rebuilding the lambda per call threw away.
 
 _STEP_REGISTRY: Dict[Tuple, "jax.stages.Wrapped"] = {}
 
 
 def _registry_get(kind: str, cfg, build):
-    key = (kind, cfg, substrate.active_backend_name())
+    key = (kind, cfg, substrate.active_backend_key())
     fn = _STEP_REGISTRY.get(key)
     if fn is None:
         fn = _STEP_REGISTRY[key] = build()
@@ -107,7 +113,7 @@ def compile_count(cfg) -> int:
     retrace counter."""
     total = 0
     for kind in ("decode", "prefill"):
-        fn = _STEP_REGISTRY.get((kind, cfg, substrate.active_backend_name()))
+        fn = _STEP_REGISTRY.get((kind, cfg, substrate.active_backend_key()))
         if fn is not None:
             # _cache_size is private jax API; the zero-recompile test's
             # `warm > 0` assertion is the canary if an upgrade drops it
@@ -192,9 +198,10 @@ class ServeSession:
     custom serving loops can also reach in directly (inside
     ``session.scope()``)."""
 
-    def __init__(self, deployment, params):
+    def __init__(self, deployment, params, options: Optional[dict] = None):
         self.deployment = deployment
         self.params = params
+        self.options = dict(options or {})
         self._auto_key_calls = 0
 
     @property
@@ -207,8 +214,9 @@ class ServeSession:
 
     def scope(self):
         """The substrate backend scope for this session (RramConfig
-        options plumbed automatically). Wrap any custom trace in it."""
-        return backend_scope(self.backend, self.cfg)
+        options plumbed automatically, plus any serve-time options like
+        ``accum="int8"``). Wrap any custom trace in it."""
+        return backend_scope(self.backend, self.cfg, **self.options)
 
     def _sampling_key(self, temperature: float, key):
         """Derive a sampling key from the deployment key when the caller
@@ -267,10 +275,14 @@ class ServeSession:
             calibrated_fraction, rram_bytes, sram_bytes,
         )
 
+        # byte accounting reads the deployment's true trees, not
+        # self.params: serve-time prepared params are padded/fused
+        # serving artifacts and would inflate the resident counts
+        dep = self.deployment
         kind = "measured resident" if self.backend != "dequant" else "estimated"
-        frac = calibrated_fraction(self.params["base"], self.params["adapters"])
+        frac = calibrated_fraction(dep.base, dep.adapters)
         return (
-            f"backend={self.backend} rram_bytes={rram_bytes(self.params['base'])}"
-            f" ({kind}) sram_bytes={sram_bytes(self.params['adapters'])}"
+            f"backend={self.backend} rram_bytes={rram_bytes(dep.base)}"
+            f" ({kind}) sram_bytes={sram_bytes(dep.adapters)}"
             f" calibrated_params={frac:.2%}"
         )

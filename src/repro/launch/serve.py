@@ -38,13 +38,20 @@ generate = deploy.generate
 
 def load_student(cfg, seed: int = 0, adapters=None, *, backend: str = "dequant") -> Dict:
     """DEPRECATED shim over ``repro.deploy.Deployment``: program a
-    deployment and return its serve params (adapters merged, Algorithm 2
-    line 12). Same seeding as always — ``Deployment.program(cfg, seed)``
-    programs the identical deployment (bitwise-identical codes)."""
+    deployment and return the LEGACY serve-param layout (raw per-leaf
+    base + adapters merged, Algorithm 2 line 12). Same seeding as always
+    — ``Deployment.program(cfg, seed)`` programs the identical deployment
+    (bitwise-identical codes). ``Deployment.serve().params`` is the
+    modern path and, under the codes backend, holds the PREPARED
+    (padded/fused) serving tree instead — this shim keeps the raw layout
+    its remaining callers index into."""
+    from repro.core.calibrate import merge_adapters_for_serve
+
     dep = deploy.Deployment.program(cfg, seed, backend=backend)
     if adapters is not None:
         dep.adapters = adapters
-    return dep.serve().params
+    merged = merge_adapters_for_serve(dep.base, dep.adapters)
+    return {"base": dep.base, "adapters": merged}
 
 
 def main():

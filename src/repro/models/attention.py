@@ -126,6 +126,55 @@ def _init_mla(key, cfg: AttentionConfig, acfg, dtype):
 
 
 # ---------------------------------------------------------------------------
+# projections (fused serve-time leaves dispatch here)
+# ---------------------------------------------------------------------------
+#
+# ``prepare_base_for_serve`` (substrate/prepared.py) may replace the
+# per-leaf q/k/v (and the MLA pairs) with a single fused leaf over the
+# concatenated output dim — one kernel launch instead of three at decode
+# shapes. The fused leaf only ever exists for SELF-attention (q/k/v share
+# the input); cross-attention trees keep per-leaf projections. Splitting
+# uses the config's head layout, so the math is unchanged.
+
+
+def _qkv_proj(x, kv_src, base, a, cfg: AttentionConfig, acfg):
+    if "_qkv" in base:
+        qkv = L.linear(x, base["_qkv"], None, acfg)
+        nq = cfg.num_heads * cfg.head_dim
+        nkv = cfg.num_kv_heads * cfg.head_dim
+        return qkv[..., :nq], qkv[..., nq : nq + nkv], qkv[..., nq + nkv :]
+    return (
+        L.linear(x, base["q"], a.get("q"), acfg),
+        L.linear(kv_src, base["k"], a.get("k"), acfg),
+        L.linear(kv_src, base["v"], a.get("v"), acfg),
+    )
+
+
+def _mla_q_kv_proj(x, base, a, cfg: AttentionConfig, acfg):
+    """(q, joint-kv) — fused as one launch when prepared ("_q_kvd")."""
+    if "_q_kvd" in base:
+        out = L.linear(x, base["_q_kvd"], None, acfg)
+        nq = cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        return out[..., :nq], out[..., nq:]
+    return (
+        L.linear(x, base["q"], a.get("q"), acfg),
+        L.linear(x, base["kv_down"], a.get("kv_down"), acfg),
+    )
+
+
+def _mla_up_proj(c_kv, base, a, cfg: AttentionConfig, acfg):
+    """(k_nope, v) from the latent — fused when prepared ("_kup_vup")."""
+    if "_kup_vup" in base:
+        out = L.linear(c_kv, base["_kup_vup"], None, acfg)
+        nk = cfg.num_heads * cfg.qk_nope_head_dim
+        return out[..., :nk], out[..., nk:]
+    return (
+        L.linear(c_kv, base["k_up"], a.get("k_up"), acfg),
+        L.linear(c_kv, base["v_up"], a.get("v_up"), acfg),
+    )
+
+
+# ---------------------------------------------------------------------------
 # masks
 # ---------------------------------------------------------------------------
 
@@ -200,15 +249,10 @@ def attention(
     t = kv_src.shape[1]
     if positions is None:
         positions = jnp.arange(s)[None, :]
-    q = L.linear(x, base["q"], a.get("q"), acfg).reshape(
-        b_, s, cfg.num_heads, cfg.head_dim
-    )
-    k = L.linear(kv_src, base["k"], a.get("k"), acfg).reshape(
-        b_, t, cfg.num_kv_heads, cfg.head_dim
-    )
-    v = L.linear(kv_src, base["v"], a.get("v"), acfg).reshape(
-        b_, t, cfg.num_kv_heads, cfg.head_dim
-    )
+    q, k, v = _qkv_proj(x, kv_src, base, a, cfg, acfg)
+    q = q.reshape(b_, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b_, t, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b_, t, cfg.num_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = L.rms_norm(q, base["q_norm"])
         k = L.rms_norm(k, base["k_norm"])
@@ -234,19 +278,16 @@ def _mla_attention(
     if positions is None:
         positions = jnp.arange(s)[None, :]
     qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
-    q = L.linear(x, base["q"], a.get("q"), acfg).reshape(b_, s, cfg.num_heads, qk_head)
+    q, kv = _mla_q_kv_proj(x, base, a, cfg, acfg)
+    q = q.reshape(b_, s, cfg.num_heads, qk_head)
     q_nope = q[..., : cfg.qk_nope_head_dim]
     q_rope = L.apply_rope(q[..., cfg.qk_nope_head_dim :], positions, cfg.rope_theta)
-    kv = L.linear(x, base["kv_down"], a.get("kv_down"), acfg)
     c_kv = L.rms_norm(kv[..., : cfg.kv_lora_rank], base["kv_norm"])
     k_rope = kv[..., cfg.kv_lora_rank :]  # (B, S, rope_dim) shared across heads
     k_rope = L.apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)
-    k_nope = L.linear(c_kv, base["k_up"], a.get("k_up"), acfg).reshape(
-        b_, s, cfg.num_heads, cfg.qk_nope_head_dim
-    )
-    v = L.linear(c_kv, base["v_up"], a.get("v_up"), acfg).reshape(
-        b_, s, cfg.num_heads, cfg.v_head_dim
-    )
+    k_nope, v = _mla_up_proj(c_kv, base, a, cfg, acfg)
+    k_nope = k_nope.reshape(b_, s, cfg.num_heads, cfg.qk_nope_head_dim)
+    v = v.reshape(b_, s, cfg.num_heads, cfg.v_head_dim)
     k_rope_b = jnp.broadcast_to(
         k_rope, (b_, s, cfg.num_heads, cfg.qk_rope_head_dim)
     )
@@ -355,15 +396,10 @@ def decode_attention(
     positions = pos[:, None]  # (B, 1)
     if cfg.mla:
         return _mla_decode(x, cache, pos, positions, base, a, cfg, acfg)
-    q = L.linear(x, base["q"], a.get("q"), acfg).reshape(
-        b_, 1, cfg.num_heads, cfg.head_dim
-    )
-    k = L.linear(x, base["k"], a.get("k"), acfg).reshape(
-        b_, 1, cfg.num_kv_heads, cfg.head_dim
-    )
-    v = L.linear(x, base["v"], a.get("v"), acfg).reshape(
-        b_, 1, cfg.num_kv_heads, cfg.head_dim
-    )
+    q, k, v = _qkv_proj(x, x, base, a, cfg, acfg)
+    q = q.reshape(b_, 1, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b_, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b_, 1, cfg.num_kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = L.rms_norm(q, base["q_norm"])
         k = L.rms_norm(k, base["k_norm"])
@@ -380,10 +416,10 @@ def decode_attention(
 def _mla_decode(x, cache, pos, positions, base, a, cfg: AttentionConfig, acfg):
     b_ = x.shape[0]
     qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
-    q = L.linear(x, base["q"], a.get("q"), acfg).reshape(b_, 1, cfg.num_heads, qk_head)
+    q, kv = _mla_q_kv_proj(x, base, a, cfg, acfg)
+    q = q.reshape(b_, 1, cfg.num_heads, qk_head)
     q_nope = q[..., : cfg.qk_nope_head_dim]
     q_rope = L.apply_rope(q[..., cfg.qk_nope_head_dim :], positions, cfg.rope_theta)
-    kv = L.linear(x, base["kv_down"], a.get("kv_down"), acfg)
     c_kv = L.rms_norm(kv[..., : cfg.kv_lora_rank], base["kv_norm"])
     k_rope_new = L.apply_rope(
         kv[..., None, cfg.kv_lora_rank :], positions, cfg.rope_theta
@@ -394,12 +430,9 @@ def _mla_decode(x, cache, pos, positions, base, a, cfg: AttentionConfig, acfg):
     # "absorbed" form folds k_up into q — left as a hillclimb; this form is
     # the reference semantics.)
     t = c_buf.shape[1]
-    k_nope = L.linear(c_buf, base["k_up"], a.get("k_up"), acfg).reshape(
-        b_, t, cfg.num_heads, cfg.qk_nope_head_dim
-    )
-    v = L.linear(c_buf, base["v_up"], a.get("v_up"), acfg).reshape(
-        b_, t, cfg.num_heads, cfg.v_head_dim
-    )
+    k_nope, v = _mla_up_proj(c_buf, base, a, cfg, acfg)
+    k_nope = k_nope.reshape(b_, t, cfg.num_heads, cfg.qk_nope_head_dim)
+    v = v.reshape(b_, t, cfg.num_heads, cfg.v_head_dim)
     k_rope_b = jnp.broadcast_to(
         r_buf[:, :, None, :], (b_, t, cfg.num_heads, cfg.qk_rope_head_dim)
     )

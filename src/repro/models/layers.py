@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import dora
 from repro.core.dora import AdapterConfig
 from repro.core.rram import CrossbarWeight
+from repro.substrate.prepared import PreparedCrossbar
 
 Pytree = Any
 
@@ -66,9 +67,11 @@ def linear(
     ``repro/substrate``); float leaves keep the plain jnp path.
     """
     w = base["w"]
-    if isinstance(w, CrossbarWeight):
+    if isinstance(w, CrossbarWeight) or isinstance(w, PreparedCrossbar):
         from repro.substrate import crossbar_linear
 
+        # PreparedCrossbar (serve-time padded/fused codes with the
+        # adapter baked in — substrate/prepared.py) ignores ``adapter``.
         return crossbar_linear(x, w, adapter, acfg, backend=backend)
     if adapter:
         return dora.adapted_forward(x, w, adapter, acfg)
@@ -220,10 +223,15 @@ def mlp(
     acfg: AdapterConfig,
 ) -> jax.Array:
     a = adapters or {}
-    up = linear(x, base["up"], a.get("up"), acfg)
-    if cfg.gated:
+    if "_gate_up" in base:
+        # serve-time fused leaf (substrate/prepared.py): gate and up share
+        # the input, so one launch over concatenated N replaces two
+        gu = linear(x, base["_gate_up"], None, acfg)
+        h = _act(gu[..., : cfg.d_ff], cfg.activation) * gu[..., cfg.d_ff :]
+    elif cfg.gated:
+        up = linear(x, base["up"], a.get("up"), acfg)
         gate = linear(x, base["gate"], a.get("gate"), acfg)
         h = _act(gate, cfg.activation) * up
     else:
-        h = _act(up, cfg.activation)
+        h = _act(linear(x, base["up"], a.get("up"), acfg), cfg.activation)
     return linear(h, base["down"], a.get("down"), acfg)

@@ -15,6 +15,7 @@ from repro.core.rram import CrossbarWeight, dequantize, program  # noqa: F401
 from repro.substrate.backends import (  # noqa: F401
     Backend,
     DEFAULT_BACKEND,
+    active_backend_key,
     active_backend_name,
     available_backends,
     crossbar_linear,
@@ -28,4 +29,12 @@ from repro.substrate.exec import (  # noqa: F401
     dora_gamma,
     rimc_linear,
     rimc_mvm_adc,
+)
+from repro.substrate.prepared import (  # noqa: F401
+    PreparedCrossbar,
+    fuse_crossbars,
+    prepare_base_for_serve,
+    prepare_crossbar,
+    prepared_ref_forward,
+    rimc_linear_prepared,
 )

@@ -35,6 +35,11 @@ from repro.core import dora as dora_lib
 from repro.core.dora import AdapterConfig
 from repro.core.rram import CrossbarWeight, dequantize
 from repro.substrate import exec as X
+from repro.substrate.prepared import (
+    PreparedCrossbar,
+    prepared_ref_forward,
+    rimc_linear_prepared,
+)
 
 DEFAULT_BACKEND = "codes"
 
@@ -110,6 +115,16 @@ def _active_options() -> dict:
     return val[1] if val else {}
 
 
+def active_backend_key() -> tuple:
+    """Hashable (name, sorted options) identity of the ambient backend —
+    what trace-level caches (the serving step registry) must key on,
+    since the options change traced behaviour just like the name does
+    (e.g. ``accum="int8"`` vs the f32 path)."""
+    val = getattr(_ACTIVE, "val", None)
+    name, options = val if val else (DEFAULT_BACKEND, {})
+    return (name, tuple(sorted(options.items())))
+
+
 def crossbar_linear(
     x: jax.Array,
     xw: CrossbarWeight,
@@ -174,6 +189,10 @@ class DequantBackend(Backend):
     name = "dequant"
 
     def linear(self, x, xw, adapter, acfg):
+        if isinstance(xw, PreparedCrossbar):
+            # prepared trees bake their adapters in; the float view is
+            # the true-extent reference forward
+            return prepared_ref_forward(x, xw)
         w = dequantize(xw)
         return dora_lib.adapted_forward(x, w, adapter, acfg)
 
@@ -187,14 +206,21 @@ class CodesBackend(Backend):
 
     name = "codes"
 
-    def linear(self, x, xw, adapter, acfg):
+    def linear(self, x, xw, adapter, acfg, *, accum="f32"):
+        if isinstance(xw, PreparedCrossbar):
+            # serve-time prepared leaf: operands already padded/fused
+            # (+ s8-recoded for int8); per-call work is the x pad only
+            return rimc_linear_prepared(
+                x, xw, interpret=X.default_interpret(), accum=accum
+            )
         gamma = _gamma_for(xw, adapter, acfg)
         if not adapter or acfg.kind == "none":
             adapter = _zero_adapter(xw.g_pos.shape[-2], xw.g_pos.shape[-1])
         if gamma is None:
             gamma = jnp.ones((1, xw.g_pos.shape[-1]), jnp.float32)
         return X.rimc_linear(
-            x, xw, adapter, gamma, interpret=X.default_interpret()
+            x, xw, adapter, gamma, interpret=X.default_interpret(),
+            accum=accum,
         )
 
 
@@ -211,6 +237,11 @@ class CodesAdcBackend(Backend):
     name = "codes_adc"
 
     def linear(self, x, xw, adapter, acfg, *, code_max=255, adc_bits=8):
+        if isinstance(xw, PreparedCrossbar):
+            raise TypeError(
+                "codes_adc reads raw per-leaf codes; prepared (fused/"
+                "padded) trees are codes-backend serving artifacts"
+            )
         y = X.rimc_mvm_adc(
             x, xw, code_max=code_max, adc_bits=adc_bits,
             interpret=X.default_interpret(),

@@ -4,9 +4,14 @@ backward compatibility).
 
 ``rimc_linear`` is the deployment-path op: it takes a CrossbarWeight (the
 programmed+drifted RRAM array), the DoRA adapter, and the merged column
-norms, pads everything to MXU-aligned tiles, and dispatches the fused
-kernel. On a CPU host ``interpret=True`` executes the kernel body with
-jnp semantics; on TPU the same call compiles to Mosaic.
+norms, picks block sizes with the analytic tuner
+(``kernels/autotune.py``), pads operands to the planned tiles, and
+dispatches the fused kernel — the decode-shaped GEMV variant when the
+whole (small) M fits one block, the tiled kernel otherwise. On a CPU
+host ``interpret=True`` executes the kernel body with jnp semantics (and
+the tuner plans unpadded tiles); on TPU the same call compiles to
+Mosaic. The serving hot path hoists the static operand padding out of
+this per-call wrapper entirely — see ``substrate/prepared.py``.
 """
 from __future__ import annotations
 
@@ -17,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.core import dora as dora_lib
 from repro.core.rram import CrossbarWeight, dequantize
-from repro.kernels.dora_linear import dora_linear
+from repro.kernels import autotune
+from repro.kernels.dora_linear import dora_linear, dora_linear_gemv
 from repro.kernels.crossbar_mvm import crossbar_mvm
 
 
@@ -65,13 +71,18 @@ def rimc_linear(
     adapter: dict,
     gamma: Optional[jax.Array] = None,
     *,
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
     interpret: bool = True,
+    accum: str = "f32",
 ) -> jax.Array:
-    """Fused Y = gamma * (X W_r + (XA)B) with automatic tile padding.
-    x: (..., K) — leading dims flattened to M."""
+    """Fused Y = gamma * (X W_r + (XA)B) with autotuned tile selection.
+    x: (..., K) — leading dims flattened to M. Block sizes default to the
+    analytic plan for (M, K, N, r) (``kernels/autotune.py``); explicit
+    ``bm``/``bn``/``bk`` override it (operands pad up to any choice, so
+    the output is block-size invariant — pinned by a hypothesis test).
+    ``accum="int8"`` selects the integer MMA path."""
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = xw.g_pos.shape[-1]
@@ -80,6 +91,13 @@ def rimc_linear(
         gamma = dora_gamma(xw, adapter)
     xf = x.reshape(-1, k)
     m = xf.shape[0]
+    if bm is None or bn is None or bk is None:
+        plan = autotune.select_tiles(
+            m, k, n, r, interpret=interpret, int8=(accum == "int8")
+        )
+        bm = plan.bm if bm is None else bm
+        bn = plan.bn if bn is None else bn
+        bk = plan.bk if bk is None else bk
     xf = _pad_to(_pad_to(xf, bm, 0), bk, 1)
     gp = _pad_to(_pad_to(xw.g_pos, bk, 0), bn, 1)
     gn = _pad_to(_pad_to(xw.g_neg, bk, 0), bn, 1)
@@ -87,9 +105,17 @@ def rimc_linear(
     a = _pad_to(adapter["lora_a"].astype(jnp.float32), bk, 0)
     b = _pad_to(adapter["lora_b"].astype(jnp.float32), bn, 1)
     g = _pad_to(gamma.astype(jnp.float32), bn, 1)
-    y = dora_linear(
-        xf, gp, gn, scale, a, b, g, bm=bm, bn=bn, bk=bk, interpret=interpret
-    )
+    if xf.shape[0] == bm:
+        # decode-shaped: single M block, K-parallel grid only
+        y = dora_linear_gemv(
+            xf, gp, gn, scale, a, b, g,
+            bn=bn, bk=bk, interpret=interpret, accum=accum,
+        )
+    else:
+        y = dora_linear(
+            xf, gp, gn, scale, a, b, g,
+            bm=bm, bn=bn, bk=bk, interpret=interpret, accum=accum,
+        )
     return y[:m, :n].reshape(lead + (n,)).astype(x.dtype)
 
 

@@ -132,6 +132,30 @@ def test_second_generate_call_triggers_zero_new_compilations():
     assert engine.compile_count() == warm
 
 
+def test_compile_count_warm_parity_codes_vs_dequant():
+    """The codes backend compiles exactly as many step programs as the
+    dequant reference for the same request mix. It used to compile twice
+    as many: ``backend_scope("dequant")`` was a nullcontext, so both
+    backends shared one registry entry keyed on the ambient default and
+    each clobbered the other's trace cache."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_arch("qwen3_1_7b").smoke, name="qwen3-smoke-warm-parity"
+    )
+    counts = {}
+    for backend in ("dequant", "codes"):
+        session = Deployment.program(cfg, 0, backend=backend).serve()
+        for plen in (4, 7, 4):
+            prompt = jax.random.randint(
+                jax.random.PRNGKey(plen), (1, plen), 0, cfg.vocab
+            )
+            session.generate(prompt, gen_len=3)
+        with session.scope():
+            counts[backend] = serving.compile_count(cfg)
+    assert counts["codes"] == counts["dequant"] > 0
+
+
 @pytest.mark.parametrize(
     "arch_id",
     ["qwen3_1_7b", "falcon_mamba_7b", "recurrentgemma_9b",

@@ -1,0 +1,264 @@
+"""Serve-time fast path (ISSUE 6): prepared operands, fused multi-leaf
+launches, the decode GEMV dispatch and the int8 MMA path — all pinned
+against the ``dequant`` reference across the model-zoo structures
+(dense/GQA, MLA, MoE stacked expert codes, ragged shapes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import dora, rram
+from repro.core.calibrate import merge_adapters_for_serve
+from repro.deploy.deployment import Deployment
+from repro.kernels import ops
+from repro.substrate import (
+    PreparedCrossbar,
+    fuse_crossbars,
+    prepare_base_for_serve,
+    prepare_crossbar,
+    prepared_ref_forward,
+    rimc_linear_prepared,
+)
+
+
+def _mk_leaf(k, n, r, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.normal(k1, (k, n)) * 0.05
+    rcfg = rram.RramConfig(relative_drift=0.1)
+    xw = rram.apply_drift(rram.program(w, rcfg), rcfg, k2)
+    acfg = dora.AdapterConfig(rank=r)
+    ad = dora.init_adapter(k3, k, n, acfg, w_base=rram.dequantize(xw))
+    ad["lora_b"] = jax.random.normal(k3, (r, n)) * 0.02
+    merged = merge_adapters_for_serve({"w": xw}, {"w": ad})["w"]
+    return xw, merged, acfg
+
+
+def _ref(x, xw, merged):
+    w = rram.dequantize(xw)
+    xf = x.astype(jnp.float32)
+    y = xf @ w + (xf @ merged["lora_a"]) @ merged["lora_b"]
+    return y * merged["dora_m_merged"][None, :]
+
+
+# ---------------------------------------------------------------------------
+# prepared leaves
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [1, 2, 8, 70])
+def test_prepared_leaf_matches_dequant_reference(m):
+    xw, merged, acfg = _mk_leaf(200, 150, 8)
+    prep = prepare_crossbar(xw, merged, acfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, 200)) * 0.5
+    y = rimc_linear_prepared(x, prep)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(_ref(x, xw, merged)), rtol=1e-4, atol=1e-4
+    )
+    # the dequant backend's view of the same prepared leaf agrees too
+    np.testing.assert_allclose(
+        np.asarray(prepared_ref_forward(x, prep)),
+        np.asarray(_ref(x, xw, merged)), rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_prepared_matches_unprepared_bitwise_same_tiles():
+    """Preparation only moves work (padding) — with the same tile plan
+    the kernel sees identical operands, so outputs are bitwise equal."""
+    xw, merged, acfg = _mk_leaf(128, 128, 8)
+    prep = prepare_crossbar(xw, merged, acfg, align=(1, 1))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128)) * 0.5
+    gamma = merged["dora_m_merged"].astype(jnp.float32)[None, :]
+    y_unprep = ops.rimc_linear(x, xw, merged, gamma)
+    y_prep = rimc_linear_prepared(x, prep)
+    np.testing.assert_array_equal(np.asarray(y_unprep), np.asarray(y_prep))
+
+
+def test_prepared_int8_within_quantization_tolerance():
+    xw, merged, acfg = _mk_leaf(256, 128, 8)
+    prep = prepare_crossbar(xw, merged, acfg, int8=True)
+    assert prep.g_pos_s8 is not None and prep.g_pos_s8.dtype == jnp.int8
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 256)) * 0.5
+    y8 = rimc_linear_prepared(x, prep, accum="int8")
+    y_ref = np.asarray(_ref(x, xw, merged))
+    assert np.abs(np.asarray(y8) - y_ref).max() < 0.02 * np.abs(y_ref).max()
+
+
+def test_fused_leaves_match_separate_launches():
+    """gate+up fusion: one launch over concatenated N == two launches.
+    Exact math — A factors concat over r, B factors block-diagonal."""
+    acfg = dora.AdapterConfig(rank=4)
+    xw1, m1, _ = _mk_leaf(128, 96, 4, seed=0)
+    xw2, m2, _ = _mk_leaf(128, 160, 4, seed=1)
+    fused = fuse_crossbars([(xw1, m1), (xw2, m2)], acfg)
+    assert fused.splits == (96, 160) and fused.n == 256
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 128)) * 0.5
+    y = rimc_linear_prepared(x, fused)
+    y1 = np.asarray(_ref(x, xw1, m1))
+    y2 = np.asarray(_ref(x, xw2, m2))
+    np.testing.assert_allclose(
+        np.asarray(y), np.concatenate([y1, y2], axis=1), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_stacked_expert_codes_vmap_parity():
+    """MoE-style stacked expert codes: vmap of the fused kernel over the
+    expert axis matches the dequant einsum the MoE layer uses."""
+    E, k, n, r = 3, 64, 96, 4
+    leaves = [_mk_leaf(k, n, r, seed=s) for s in range(E)]
+    xws = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls), *[l[0] for l in leaves],
+        is_leaf=lambda v: isinstance(v, jax.Array),
+    )
+    x = jax.random.normal(jax.random.PRNGKey(9), (E, 2, k)) * 0.5
+    acfg = leaves[0][2]
+
+    def per_expert(xe, xwe, me):
+        gamma = me["dora_m_merged"].astype(jnp.float32)[None, :]
+        return ops.rimc_linear(xe, xwe, me, gamma)
+
+    merged_stack = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls), *[l[1] for l in leaves]
+    )
+    y = jax.vmap(per_expert)(x, xws, merged_stack)
+    y_ref = np.stack([
+        np.asarray(_ref(x[e], leaves[e][0], leaves[e][1])) for e in range(E)
+    ])
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the no-pad guarantee (the _pad_to-inside-jit fix)
+# ---------------------------------------------------------------------------
+
+
+def _count_pad_eqns(jaxpr) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pad":
+            total += 1
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", v)
+            if hasattr(inner, "eqns"):
+                total += _count_pad_eqns(inner)
+    return total
+
+
+def test_prepared_decode_call_has_no_pad_ops():
+    """With operands prepared at serve time and the interpret-mode plan
+    using true extents, the traced decode-shaped call contains zero pad
+    primitives — the per-call jnp.pad copies are fully hoisted."""
+    xw, merged, acfg = _mk_leaf(128, 128, 8)
+    prep = prepare_crossbar(xw, merged, acfg, align=(1, 1))
+    x = jnp.zeros((2, 128))
+    jaxpr = jax.make_jaxpr(lambda xx: rimc_linear_prepared(xx, prep))(x)
+    assert _count_pad_eqns(jaxpr.jaxpr) == 0
+
+
+def test_unprepared_aligned_call_has_no_pad_ops():
+    """Even unprepared, an interpret-mode call never pads: the autotuner
+    plans tiles at the true extents."""
+    xw, merged, acfg = _mk_leaf(200, 150, 8)
+    gamma = merged["dora_m_merged"].astype(jnp.float32)[None, :]
+    x = jnp.zeros((2, 200))
+    jaxpr = jax.make_jaxpr(
+        lambda xx: ops.rimc_linear(xx, xw, merged, gamma)
+    )(x)
+    assert _count_pad_eqns(jaxpr.jaxpr) == 0
+
+
+# ---------------------------------------------------------------------------
+# model-tree preparation + end-to-end parity
+# ---------------------------------------------------------------------------
+
+
+def test_prepare_base_walker_fuses_expected_groups():
+    cfg = get_arch("qwen3-1.7b").smoke
+    dep = Deployment.program(cfg, 0, backend="codes")
+    merged = merge_adapters_for_serve(dep.base, dep.adapters)
+    prep = prepare_base_for_serve(dep.base, merged, cfg)
+    blocks = prep["blocks"] if "blocks" in prep else prep
+    leaves = jax.tree_util.tree_leaves(
+        prep, is_leaf=lambda v: isinstance(v, PreparedCrossbar)
+    )
+    assert any(isinstance(l, PreparedCrossbar) for l in leaves)
+
+    def collect_keys(node, out):
+        if isinstance(node, dict):
+            out.update(node.keys())
+            for v in node.values():
+                collect_keys(v, out)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                collect_keys(v, out)
+
+    keys: set = set()
+    collect_keys(prep, keys)
+    assert "_qkv" in keys and "_gate_up" in keys
+    # fused members are consumed
+    assert not ({"q", "k", "v"} & keys)
+
+
+def test_prepare_base_walker_respects_structure_guards():
+    # MLA (deepseek): q+kv_down and k_up+v_up fuse, never plain qkv
+    cfg = get_arch("deepseek-v2-lite-16b").smoke
+    dep = Deployment.program(cfg, 0, backend="codes")
+    merged = merge_adapters_for_serve(dep.base, dep.adapters)
+    prep = prepare_base_for_serve(dep.base, merged, cfg)
+    keys: set = set()
+
+    def collect(node):
+        if isinstance(node, dict):
+            keys.update(node.keys())
+            for v in node.values():
+                collect(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                collect(v)
+
+    collect(prep)
+    assert "_q_kvd" in keys and "_kup_vup" in keys and "_qkv" not in keys
+
+    # cross-attention (seamless): q reads the decoder stream but k/v read
+    # the encoder — the xattn subtree must never fuse qkv
+    cfg_x = get_arch("seamless-m4t-large-v2").smoke
+    dep_x = Deployment.program(cfg_x, 0, backend="codes")
+    merged_x = merge_adapters_for_serve(dep_x.base, dep_x.adapters)
+    prep_x = prepare_base_for_serve(dep_x.base, merged_x, cfg_x)
+
+    def xattn_nodes(node, inside=False, found=None):
+        found = [] if found is None else found
+        if isinstance(node, dict):
+            for key, v in node.items():
+                if inside and key == "_qkv":
+                    found.append(v)
+                xattn_nodes(v, inside or key == "xattn", found)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                xattn_nodes(v, inside, found)
+        return found
+
+    assert xattn_nodes(prep_x) == []
+
+
+@pytest.mark.parametrize(
+    "arch,tol", [("qwen3-1.7b", 0.05), ("deepseek-v2-lite-16b", 0.10)]
+)
+def test_serve_prefill_parity_codes_vs_dequant(arch, tol):
+    """The whole fast path end-to-end: prepared + fused + GEMV codes
+    serving matches the dequant reference on prefill logits."""
+    cfg = get_arch(arch).smoke
+    prompt = jnp.asarray(
+        np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab
+    )
+    logits = {}
+    for backend in ("dequant", "codes"):
+        dep = Deployment.program(cfg, 0, backend=backend)
+        session = dep.serve()
+        with session.scope():
+            logits[backend], _ = session.prefill(prompt, 12)
+    ld = np.asarray(logits["dequant"], np.float32)
+    lc = np.asarray(logits["codes"], np.float32)
+    rel = np.linalg.norm(ld - lc) / np.linalg.norm(ld)
+    assert rel < tol

@@ -5,15 +5,32 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
-    reason="dev dependency (requirements-dev.txt); suite degrades to skip",
-)
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# hypothesis is a dev dependency (requirements-dev.txt): only the
+# property tests skip without it — the example-based kernel parity suite
+# (the ISSUE 6 regression gate) must run everywhere.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+    def given(**kwargs):  # noqa: D103 - stub so decorators still apply
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(**kwargs):
+        return lambda fn: fn
+
+    class _St:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
 
 from repro.core import dora, rram
-from repro.kernels import ops, ref
-from repro.kernels.dora_linear import dora_linear
+from repro.kernels import autotune, ops, ref
+from repro.kernels.dora_linear import dora_linear, dora_linear_gemv
 from repro.kernels.crossbar_mvm import crossbar_mvm
 
 
@@ -128,3 +145,106 @@ def test_property_dora_linear_matches_oracle(mi, ki, ni, r, seed):
         ad["lora_a"], ad["lora_b"], gamma,
     )
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode-shaped GEMV variant, int8 MMA, autotuner (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def _rimc_ref(x, xw, ad):
+    w = rram.dequantize(xw)
+    acfg = dora.AdapterConfig(rank=ad["lora_a"].shape[-1])
+    merged = dora.merge_magnitude(w, ad, acfg)
+    return dora.adapted_forward(
+        x.astype(jnp.float32), w, ad, acfg, merged_norm=merged
+    )
+
+
+@pytest.mark.parametrize("m", [1, 2, 8])
+@pytest.mark.parametrize("k,n", [(128, 128), (200, 150)])
+def test_rimc_linear_decode_shapes_vs_oracle(m, k, n):
+    """Small-M calls (the decode hot path) dispatch the GEMV variant —
+    incl. ragged K/N where the wrapper pads on TPU and not on CPU."""
+    x, xw, ad = _mk(m, k, n, 8)
+    y = ops.rimc_linear(x, xw, ad)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(_rimc_ref(x, xw, ad)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_dora_linear_gemv_matches_tiled_kernel():
+    """Same operands, same K split: the single-M-block GEMV launcher and
+    the tiled launcher compute identical sums."""
+    x, xw, ad = _mk(8, 256, 128, 8)
+    gamma = ops.dora_gamma(xw, ad)
+    scale = xw.scale.reshape(1, -1).astype(jnp.float32)
+    xp = jnp.pad(x, ((0, 120), (0, 0)))  # tiled kernel needs M % 128 == 0
+    y_tiled = dora_linear(
+        xp, xw.g_pos, xw.g_neg, scale, ad["lora_a"], ad["lora_b"], gamma,
+        interpret=True,
+    )[:8]
+    y_gemv = dora_linear_gemv(
+        x, xw.g_pos, xw.g_neg, scale, ad["lora_a"], ad["lora_b"], gamma,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_gemv), np.asarray(y_tiled), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("m", [2, 128])
+def test_rimc_linear_int8_accum_tolerance(m):
+    """Integer MMA path: s8 activation quantization bounds the error at
+    <2% of the output absmax (codes dequant stays exact — the u8->s8
+    offset recode cancels in the differential combine)."""
+    x, xw, ad = _mk(m, 256, 128, 8)
+    y8 = ops.rimc_linear(x, xw, ad, accum="int8")
+    y_ref = np.asarray(_rimc_ref(x, xw, ad))
+    err = np.abs(np.asarray(y8) - y_ref).max()
+    assert err < 0.02 * np.abs(y_ref).max() + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([2, 70, 128]),
+    kn=st.sampled_from([(128, 128), (200, 150)]),
+    tiles=st.sampled_from([(None, None, None), (128, 128, 128), (8, 64, 32)]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_property_rimc_linear_block_size_invariant(m, kn, tiles, seed):
+    """The output must not depend on tile choice: explicit (bm, bn, bk)
+    overrides agree with the autotuned plan (operands pad to any
+    choice)."""
+    k, n = kn
+    x, xw, ad = _mk(m, k, n, 8, seed=seed)
+    bm, bn, bk = tiles
+    y = ops.rimc_linear(x, xw, ad, bm=bm, bn=bn, bk=bk)
+    y_auto = ops.rimc_linear(x, xw, ad)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(y_auto), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_autotune_interpret_plans_never_pad():
+    for m, k, n, r in [(1, 64, 64, 4), (2, 200, 150, 8), (128, 256, 384, 16)]:
+        plan = autotune.select_tiles(m, k, n, r, interpret=True)
+        assert (plan.m_pad, plan.k_pad, plan.n_pad) == (m, k, n)
+        assert plan.gemv  # grid has no M axis: whole M is one block
+
+
+def test_autotune_tpu_plans_aligned_and_within_budget():
+    for m, k, n, r, int8 in [
+        (2, 2048, 4096, 8, False), (512, 4096, 4096, 16, False),
+        (8, 1024, 1024, 8, True),
+    ]:
+        plan = autotune.select_tiles(m, k, n, r, interpret=False, int8=int8)
+        sublane = 32 if int8 else 8
+        assert plan.bm % sublane == 0 and plan.bn % 128 == 0
+        assert plan.k_pad % plan.bk == 0 and plan.n_pad % plan.bn == 0
+        assert plan.m_pad % plan.bm == 0
+        assert autotune._vmem_bytes(
+            plan.bm, plan.bn, plan.bk, r, int8
+        ) <= autotune.VMEM_BUDGET_BYTES
+        if m <= autotune.GEMV_MAX_M:
+            assert plan.gemv and plan.bm < 128
