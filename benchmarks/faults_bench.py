@@ -1,0 +1,111 @@
+"""Fault-recovery bench: DoRA calibration must measurably restore
+accuracy under EVERY fault class — without a single RRAM rewrite.
+
+Drives ``repro.faults.study.fault_recovery_study``: per fault class
+(stuck-at, saturated, retention, I-V non-linearity) it programs a
+deployment, ages it ``--hours`` in the field, injects the fault, and
+calibrates the SRAM side-cars on the faulty base, recording the
+teacher/student logit MSE at clean / faulted / calibrated. The GATE —
+exit 1 — fires if any class's calibrated MSE fails to improve on its
+faulted MSE: that would mean the paper's "calibrate, don't reprogram"
+claim broke for that non-ideality.
+
+The model config is the CPU-scale smoke config in both modes; the
+default mode runs the paper's calibration scale (10 samples, 20 epochs)
+while ``--smoke`` shrinks the calibration set for CI's fast lane. The
+subject is the RECOVERY TRAJECTORY per fault class, not absolute MSE.
+
+Usage:
+    PYTHONPATH=src python benchmarks/faults_bench.py --smoke \
+        [--out BENCH_faults.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3_1_7b")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI fast lane: fewer calibration samples/epochs",
+    )
+    ap.add_argument("--samples", type=int, default=None,
+                    help="calibration samples (default: paper's 10; smoke 4)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="calibration epochs (default: paper's 20; smoke 12)")
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--hours", type=float, default=300.0,
+                    help="field hours of drift before the fault lands")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+
+    from repro.faults import FAULT_CLASSES, default_spec, fault_recovery_study
+
+    samples = args.samples or (4 if args.smoke else 10)
+    steps = args.steps or (12 if args.smoke else 20)
+    seq_len = args.seq_len or (16 if args.smoke else 32)
+
+    t0 = time.perf_counter()
+    results = fault_recovery_study(
+        args.arch, smoke=True, samples=samples, steps=steps,
+        seq_len=seq_len, hours=args.hours, seed=args.seed,
+    )
+    elapsed = time.perf_counter() - t0
+
+    violations = []
+    for kind in FAULT_CLASSES:
+        r = results[kind]
+        spec = default_spec(kind, args.seed + 1)
+        r["spec"] = spec.to_dict()
+        recovered = r["calibrated_mse"] < r["faulted_mse"]
+        r["recovered"] = bool(recovered)
+        print(
+            f"{kind:>16}: clean={r['clean_mse']:.3f} "
+            f"faulted={r['faulted_mse']:.3f} "
+            f"calibrated={r['calibrated_mse']:.3f} "
+            f"(recovered {100 * r['recovered_fraction']:.0f}% of the "
+            f"fault-induced error)"
+        )
+        if not recovered:
+            violations.append(
+                f"{kind}: calibration did not improve the faulted model "
+                f"({r['calibrated_mse']:.4f} >= {r['faulted_mse']:.4f})"
+            )
+
+    payload = {
+        "bench": "faults",
+        "arch": args.arch,
+        "mode": "smoke" if args.smoke else "full",
+        "samples": samples,
+        "steps": steps,
+        "seq_len": seq_len,
+        "hours": args.hours,
+        "seed": args.seed,
+        "elapsed_seconds": round(elapsed, 2),
+        "classes": results,
+        "violations": violations,
+    }
+    out = json.dumps(payload, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out + "\n")
+        print(f"wrote {args.out}")
+    else:
+        print(out)
+
+    if violations:
+        print("FAULT RECOVERY GATE FAILED:")
+        for v in violations:
+            print(f"  - {v}")
+        raise SystemExit(1)
+    print(f"all {len(FAULT_CLASSES)} fault classes recovered "
+          f"({elapsed:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Fault recovery: inject -> detect -> recalibrate -> verify, without a
+single RRAM rewrite.
+
+``examples/fleet_lifecycle.py`` handles the SOFT failure mode: drift,
+a diffusion every chip suffers gradually. This example walks the HARD
+one — a chip in the fleet develops stuck cells (forming/endurance
+failure, pinned to a conductance rail; drift can't move them and a
+rewrite can't fix them) — and shows the non-ideality suite closing the
+loop digitally:
+
+1. ``fleet.inject(stuck_at(...), chips=[...])`` — faults apply at code
+   READ-BACK: the pristine codes stay resident, every backend and the
+   prepared serve path read the same faulty view.
+2. ``Fleet.hard_fault_proxy`` — the MAX single-column norm jump, a
+   signature drift's distributed diffusion cannot produce — separates
+   the broken chip from a merely-drifted one, forward-free.
+3. ``RecalibrationScheduler(hard_threshold=...)`` routes the broken
+   chip down the hard path (double calibration effort, permanent flag
+   in the ``FleetReport``) and the drifted chip down the normal path.
+4. Verify: per-chip teacher/student logit MSE before and after — DoRA's
+   SRAM side-cars absorb the fault; the array is never reprogrammed.
+
+Run:  PYTHONPATH=src python examples/fault_recovery.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.faults import stuck_at
+from repro.fleet import Fleet, RecalibrationScheduler
+
+
+def main():
+    cfg = get_arch("qwen3-1.7b").smoke
+    fleet = Fleet.program(cfg, key=0, n_chips=3)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab
+    )}
+
+    # chip 0 develops stuck cells in the field; chips 1/2 only drift
+    fleet.advance([50.0, 300.0, 0.5])
+    mse_before = fleet.logit_mse(batch)
+    fleet.inject(stuck_at(key=7, rate=0.05), chips=[0])
+    mse_faulted = fleet.logit_mse(batch)
+    print(f"teacher/student logit MSE per chip:")
+    print(f"  drifted           : {np.round(mse_before, 3).tolist()}")
+    print(f"  chip 0 stuck cells: {np.round(mse_faulted, 3).tolist()}")
+
+    # detection is forward-free: the drift proxy reads diffuse movement,
+    # the hard proxy reads single-column jumps only real damage makes
+    print(f"drift proxy: {np.round(fleet.drift_proxy(), 3).tolist()}")
+    print(f"hard  proxy: {np.round(fleet.hard_fault_proxy(), 3).tolist()}")
+
+    sched = RecalibrationScheduler(
+        fleet, threshold=0.02, hard_threshold=0.3,
+        calib_args={"batch_or_samples": 8, "steps": 10, "lr": 3e-3,
+                    "seq_len": 32},
+    )
+    rec = sched.tick(0.0)  # maintenance visit: no extra aging
+    print(f"hard-fault path: chips {rec.hard_faulted} "
+          f"({rec.hard_report.epochs_run} epochs); "
+          f"drift path: chips {rec.recalibrated}")
+
+    mse_after = fleet.logit_mse(batch)
+    print(f"  recalibrated      : {np.round(mse_after, 3).tolist()}")
+    recovered = (mse_faulted[0] - mse_after[0]) / mse_faulted[0]
+    print(f"chip 0 recovered {100 * recovered:.0f}% of its error — "
+          f"SRAM side-cars only, zero RRAM writes")
+
+    report = sched.report()
+    print(report.summary())
+    print(f"flagged for replacement: chips {report.hard_faulted_chips} "
+          f"(the damage is physical; DoRA buys serviceable accuracy "
+          f"until the swap)")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,15 +43,23 @@ def backend_scope(backend: str, cfg=None, **options):
     registry key (via ``substrate.active_backend_key``) honest.
 
     Substrate-aware scoping: passing the model config plumbs its
-    ``RramConfig`` into the ADC-faithful backend automatically
-    (``code_max``/``adc_bits`` must match the programmed deployment —
-    ``ServeSession`` always passes its deployment's config, so sessions
-    never serve with a mismatched ADC). Extra ``options`` (e.g.
-    ``accum="int8"``) forward to the backend's ``linear``.
+    ``RramConfig`` into the ADC-faithful backend automatically — the
+    config is the single source of truth for ``code_max``/``adc_bits``,
+    and an explicit option that CONFLICTS with it raises ``ValueError``
+    (it used to be silently accepted, letting a session serve with an
+    ADC the array was never programmed for). ``ServeSession`` always
+    passes its deployment's config, so sessions never serve with a
+    mismatched ADC. Extra ``options`` (e.g. ``accum="int8"``) forward
+    to the backend's ``linear``.
     """
     if backend == "codes_adc" and cfg is not None:
-        options.setdefault("code_max", cfg.rram.code_max)
-        options.setdefault("adc_bits", cfg.rram.adc_bits)
+        from repro.substrate.backends import resolve_adc_limits
+
+        code_max, adc_bits = resolve_adc_limits(
+            cfg.rram, options.get("code_max"), options.get("adc_bits")
+        )
+        options["code_max"] = code_max
+        options["adc_bits"] = adc_bits
     return substrate.use_backend(backend, **options)
 
 

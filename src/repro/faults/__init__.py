@@ -1,0 +1,36 @@
+"""Device non-ideality suite: composable fault injection on the
+crossbar substrate.
+
+Data model (``faults/map.py``): ``LeafFaults`` per RRAM leaf /
+``FaultMap`` per model, registered pytrees whose composition is a
+commutative, idempotent lattice join. Events (``faults/generators.py``):
+serializable ``FaultSpec``s — ``stuck_at``, ``saturated``,
+``retention``, ``iv_nonlinearity`` — that materialize into maps with
+drift-style ``fold_in(key, crc32(path))`` keying (and a chip fold for
+fleets). Injection surfaces as ``Deployment.inject(faults)`` /
+``Fleet.inject(faults, chips=...)``; application happens at code
+read-back through ``substrate.faulted_codes``, so every backend and the
+prepared/fused serve path see identical faulty weights. The
+accuracy-recovery experiment lives in ``faults/study.py``.
+"""
+from repro.faults.generators import (  # noqa: F401
+    FAULT_KINDS,
+    FaultSpec,
+    build_fleet_map,
+    build_map,
+    iv_nonlinearity,
+    retention,
+    saturated,
+    stuck_at,
+)
+from repro.faults.map import (  # noqa: F401
+    FaultMap,
+    LeafFaults,
+    apply_fault_map,
+    compose_maps,
+)
+from repro.faults.study import (  # noqa: F401
+    FAULT_CLASSES,
+    default_spec,
+    fault_recovery_study,
+)

@@ -1,0 +1,278 @@
+"""Fault generators: serializable ``FaultSpec`` events that materialize
+into ``FaultMap``s.
+
+A spec is the *event*, the map is the *state* — exactly the split the
+drift clock uses (``drift_hours`` replays into codes). Specs are plain
+frozen records (kind + parameters + raw PRNG key words), so
+``Deployment.snapshot``/``Fleet.snapshot`` store them as JSON and
+restore replays them bitwise. Per-leaf draws key off
+``fold_in(spec_key, crc32(path))`` — the drift-event keying — and the
+fleet folds the chip index in first (``spec.for_chip(i)``), which is
+what makes ``Fleet.inject`` on N chips bitwise identical to N
+independent ``Deployment.inject`` runs.
+
+The four fault classes (taxonomy table in README "Non-ideality suite"):
+
+* ``stuck_at``        — cells pinned to LRS (``code_max``) or HRS (0);
+                        forming/endurance failures (8-bit RIMC core,
+                        arxiv 2008.11669).
+* ``saturated``       — cells clamped below ``code_max``; compliance-
+                        limited programming (arxiv 2008.11669).
+* ``retention``       — deterministic multiplicative code decay on a
+                        random cell subset (ReRAM-aware finetuning,
+                        arxiv 2606.17471).
+* ``iv_nonlinearity`` — read-path distortion of the effective
+                        conductance, ``sinh``-bent like the device I-V
+                        curve (arxiv 2606.17471). Keyless: it is a
+                        column-driver property, not a per-cell draw.
+
+ADC clipping intentionally stays in the ``codes_adc`` backend — it is a
+periphery property of a READ, not array state — but its limits come
+from the same ``RramConfig`` (``deploy/serving.py::backend_scope``
+raises on a conflicting override).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rram
+from repro.core.calibrate import _path_str
+from repro.faults.map import FaultMap, LeafFaults
+
+FAULT_KINDS = ("stuck_at", "saturated", "retention", "iv_nonlinearity")
+
+
+def _key_words(key) -> Tuple[int, ...]:
+    """Normalize an int seed / PRNGKey to raw uint32 words (JSON-safe)."""
+    if isinstance(key, (int, np.integer)):
+        key = jax.random.PRNGKey(int(key))
+    return tuple(int(v) for v in np.asarray(key).reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injectable fault event: kind + parameters + PRNG key words
+    (``None`` for keyless kinds). Hashable, JSON-serializable, and
+    replayable — snapshot/restore round-trips these verbatim."""
+
+    kind: str
+    params: Tuple[Tuple[str, float], ...]
+    key_data: Optional[Tuple[int, ...]] = None
+
+    @property
+    def param(self) -> Dict[str, float]:
+        return dict(self.params)
+
+    def key(self) -> jax.Array:
+        return jnp.asarray(self.key_data, jnp.uint32)
+
+    def for_chip(self, chip: int) -> "FaultSpec":
+        """The per-chip event: chip index folded into the spec key, so a
+        solo ``Deployment.inject(spec.for_chip(i))`` draws bitwise what
+        ``Fleet.inject(spec, chips=[i])`` drew for chip ``i``."""
+        if self.key_data is None:
+            return self
+        folded = jax.random.fold_in(self.key(), int(chip))
+        return dataclasses.replace(self, key_data=_key_words(folded))
+
+    def to_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "params": dict(self.params),
+            "key_data": None if self.key_data is None else list(self.key_data),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultSpec":
+        kd = d.get("key_data")
+        return cls(
+            kind=d["kind"],
+            params=tuple(sorted((k, float(v)) for k, v in d["params"].items())),
+            key_data=None if kd is None else tuple(int(v) for v in kd),
+        )
+
+
+def _spec(kind: str, key, **params) -> FaultSpec:
+    return FaultSpec(
+        kind=kind,
+        params=tuple(sorted((k, float(v)) for k, v in params.items())),
+        key_data=None if key is None else _key_words(key),
+    )
+
+
+def _check_rate(rate: float) -> float:
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f"fault rate must be in [0, 1], got {rate}")
+    return float(rate)
+
+
+def stuck_at(key, *, rate: float, lrs_fraction: float = 0.5) -> FaultSpec:
+    """Cells pinned to a rail: each device cell sticks with probability
+    ``rate``; of those, ``lrs_fraction`` pin to LRS (``code_max``), the
+    rest to HRS (0). Drift can no longer move them — the faulty view
+    re-pins after every ``advance``."""
+    if not 0.0 <= lrs_fraction <= 1.0:
+        raise ValueError(f"lrs_fraction must be in [0, 1], got {lrs_fraction}")
+    return _spec("stuck_at", key, rate=_check_rate(rate),
+                 lrs_fraction=lrs_fraction)
+
+
+def saturated(key, *, rate: float, cap_fraction: float = 0.75) -> FaultSpec:
+    """Cells that cannot reach full conductance: with probability
+    ``rate`` a cell's readable code clamps at
+    ``round(cap_fraction * code_max)``."""
+    if not 0.0 < cap_fraction <= 1.0:
+        raise ValueError(f"cap_fraction must be in (0, 1], got {cap_fraction}")
+    return _spec("saturated", key, rate=_check_rate(rate),
+                 cap_fraction=cap_fraction)
+
+
+def retention(key, *, rate: float, retain: float = 0.5) -> FaultSpec:
+    """Retention loss: with probability ``rate`` a cell's code decays to
+    ``round(code * retain)`` — deterministic and replayable, keyed like
+    a drift event (not a drift draw: retention is a persistent floor,
+    drift is a diffusion)."""
+    if not 0.0 <= retain <= 1.0:
+        raise ValueError(f"retain must be in [0, 1], got {retain}")
+    return _spec("retention", key, rate=_check_rate(rate), retain=retain)
+
+
+def iv_nonlinearity(strength: float) -> FaultSpec:
+    """Read-path I-V distortion: the effective conductance at read is
+    ``code_max * sinh(s*u)/sinh(s)`` for normalized code ``u`` —
+    ``s=0`` is the linear (healthy) read. Applies to every RRAM leaf;
+    keyless."""
+    if strength < 0:
+        raise ValueError(f"strength must be >= 0, got {strength}")
+    return _spec("iv_nonlinearity", None, strength=strength)
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+
+def _leaf_fault(
+    spec: FaultSpec, key: Optional[jax.Array], shape, cfg: rram.RramConfig,
+) -> LeafFaults:
+    """Draw one leaf's fault record (pure in (spec, key, shape) — the
+    fleet vmaps this over per-chip keys)."""
+    cm = int(cfg.code_max)
+    p = spec.param
+    if spec.kind == "iv_nonlinearity":
+        return LeafFaults(iv_strength=jnp.float32(p["strength"]))
+    kp, kn = jax.random.split(key)
+    up = jax.random.uniform(kp, shape)
+    un = jax.random.uniform(kn, shape)
+    rate = p["rate"]
+    if spec.kind == "stuck_at":
+        lrs = rate * p["lrs_fraction"]
+        return LeafFaults(
+            stuck_mask_pos=up < rate,
+            stuck_val_pos=jnp.where(up < lrs, cm, 0).astype(jnp.uint8),
+            stuck_mask_neg=un < rate,
+            stuck_val_neg=jnp.where(un < lrs, cm, 0).astype(jnp.uint8),
+        )
+    if spec.kind == "saturated":
+        cap = round(p["cap_fraction"] * cm)
+        return LeafFaults(
+            cap_pos=jnp.where(up < rate, cap, cm).astype(jnp.uint8),
+            cap_neg=jnp.where(un < rate, cap, cm).astype(jnp.uint8),
+        )
+    if spec.kind == "retention":
+        r = p["retain"]
+        return LeafFaults(
+            retain_pos=jnp.where(up < rate, r, 1.0).astype(jnp.float32),
+            retain_neg=jnp.where(un < rate, r, 1.0).astype(jnp.float32),
+        )
+    raise ValueError(f"unknown fault kind {spec.kind!r}; known: {FAULT_KINDS}")
+
+
+def _rram_leaves(tree) -> List[Tuple[str, rram.CrossbarWeight]]:
+    out: List[Tuple[str, rram.CrossbarWeight]] = []
+
+    def visit(path, x):
+        if isinstance(x, rram.CrossbarWeight):
+            out.append((_path_str(path), x))
+        return x
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )
+    return out
+
+
+def _path_key(spec: FaultSpec, path: str) -> Optional[jax.Array]:
+    if spec.key_data is None:
+        return None
+    h = jnp.uint32(zlib.crc32(path.encode()))
+    return jax.random.fold_in(spec.key(), h)
+
+
+def build_map(codes, spec: FaultSpec, cfg: rram.RramConfig) -> FaultMap:
+    """Materialize a spec over one deployment's codes tree: one
+    ``LeafFaults`` per RRAM leaf, drawn from
+    ``fold_in(spec_key, crc32(path))``."""
+    leaves = {
+        path: _leaf_fault(spec, _path_key(spec, path), xw.g_pos.shape, cfg)
+        for path, xw in _rram_leaves(codes)
+    }
+    return FaultMap(leaves)
+
+
+def build_fleet_map(
+    per_chip_codes, spec: FaultSpec, cfg: rram.RramConfig,
+    chips: Sequence[int], n_chips: int,
+) -> FaultMap:
+    """Materialize a spec over a fleet: per-chip draws (vmapped over
+    ``fold_in(spec_key, chip)``) for the selected ``chips``, expanded to
+    the full chip axis with exact-identity rows elsewhere. Chip ``i``'s
+    row is bitwise ``build_map(codes_i, spec.for_chip(i))``.
+
+    ``per_chip_codes`` supplies the PER-CHIP leaf shapes (e.g.
+    ``fleet.chip(0).codes``); the returned map's fields carry a leading
+    ``(n_chips, ...)`` axis matching the stacked codes."""
+    chips = [int(c) for c in chips]
+    idx = jnp.asarray(chips, jnp.int32)
+    cm = int(cfg.code_max)
+    leaves: Dict[str, LeafFaults] = {}
+    for path, xw in _rram_leaves(per_chip_codes):
+        shape = xw.g_pos.shape
+        if spec.key_data is None:
+            # keyless (iv): per-chip strength vector, zero = healthy row
+            strength = float(spec.param["strength"])
+            full = jnp.zeros((n_chips,), jnp.float32).at[idx].set(strength)
+            leaves[path] = LeafFaults(iv_strength=full)
+            continue
+        h = jnp.uint32(zlib.crc32(path.encode()))
+        sub = jax.vmap(
+            lambda c: _leaf_fault(
+                spec,
+                jax.random.fold_in(jax.random.fold_in(spec.key(), c), h),
+                shape, cfg,
+            )
+        )(jnp.asarray(chips, jnp.uint32))
+
+        def expand(field, fill, dtype):
+            if field is None:
+                return None
+            full = jnp.full((n_chips,) + shape, fill, dtype)
+            return full.at[idx].set(field)
+
+        leaves[path] = LeafFaults(
+            stuck_mask_pos=expand(sub.stuck_mask_pos, False, jnp.bool_),
+            stuck_val_pos=expand(sub.stuck_val_pos, 0, jnp.uint8),
+            stuck_mask_neg=expand(sub.stuck_mask_neg, False, jnp.bool_),
+            stuck_val_neg=expand(sub.stuck_val_neg, 0, jnp.uint8),
+            cap_pos=expand(sub.cap_pos, cm, jnp.uint8),
+            cap_neg=expand(sub.cap_neg, cm, jnp.uint8),
+            retain_pos=expand(sub.retain_pos, 1.0, jnp.float32),
+            retain_neg=expand(sub.retain_neg, 1.0, jnp.float32),
+        )
+    return FaultMap(leaves)

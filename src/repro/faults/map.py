@@ -1,0 +1,207 @@
+"""Composable per-leaf fault maps over the crossbar substrate.
+
+A ``FaultMap`` describes device non-idealities as data: one
+``LeafFaults`` record per RRAM leaf (keyed by the same crc32 path
+strings the drift clock uses), each holding the per-cell fault state for
+the positive and negative device arrays of the differential pair. The
+map is a registered pytree, so a fleet-scale map simply carries a
+leading chip axis on every field and rides the same ``jax.vmap``
+dispatches as the stacked codes.
+
+Faults apply at code READ-BACK: the resident (pristine) codes are never
+mutated. ``apply_fault_map`` derives a faulty uint8 codes view, and
+every consumer — the ``codes``/``dequant``/``codes_adc`` backends, the
+prepared/fused serve path, the fleet's drift proxy — reads that one
+view, which is what makes backend parity under faults bitwise by
+construction (``substrate/exec.py::faulted_codes`` is the choke point).
+
+Composition semantics are a lattice, so ``compose`` is commutative and
+idempotent by construction (the hypothesis property in
+``tests/test_properties.py`` pins this):
+
+* stuck cells — masks OR, pinned codes combine by ``maximum`` (a cell
+  stuck at LRS by either map is LRS in the composite);
+* saturation caps — elementwise ``minimum`` (the tighter clamp wins);
+* retention factors — elementwise ``minimum`` (the worse decay wins);
+* I-V non-linearity strength — ``maximum``.
+
+Application order within one leaf is canonical and fixed — retention
+decay, then I-V read distortion, then saturation clamp, then stuck
+pins — so a composite map has ONE meaning regardless of the order its
+parts were injected in. Every stage is elementwise on the code grid,
+which is why a chip-stacked map broadcasts through without any special
+casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rram
+from repro.core.calibrate import _path_str
+
+_FIELDS = (
+    "stuck_mask_pos", "stuck_val_pos", "stuck_mask_neg", "stuck_val_neg",
+    "cap_pos", "cap_neg", "retain_pos", "retain_neg", "iv_strength",
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LeafFaults:
+    """Fault state for one RRAM leaf. ``None`` fields are exact
+    identities for their stage (not all-default arrays), so a map built
+    by one generator stays as small as what it actually pins.
+
+    Shapes match the leaf's device arrays (``g_pos``/``g_neg``), with an
+    optional leading chip axis; ``iv_strength`` is a scalar (or a
+    per-chip vector) — I-V bending is a read-path property of the whole
+    column driver, not of single cells."""
+
+    stuck_mask_pos: Optional[jax.Array] = None  # bool, True = pinned
+    stuck_val_pos: Optional[jax.Array] = None   # uint8, 0 outside masks
+    stuck_mask_neg: Optional[jax.Array] = None
+    stuck_val_neg: Optional[jax.Array] = None
+    cap_pos: Optional[jax.Array] = None         # uint8 clamp, code_max = no-op
+    cap_neg: Optional[jax.Array] = None
+    retain_pos: Optional[jax.Array] = None      # f32 in [0, 1], 1 = no decay
+    retain_neg: Optional[jax.Array] = None
+    iv_strength: Optional[jax.Array] = None     # f32 >= 0, 0 = linear read
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in _FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def compose(self, other: "LeafFaults") -> "LeafFaults":
+        """Lattice join of two fault records (commutative, idempotent)."""
+
+        def comb(a, b, f):
+            if a is None:
+                return b
+            if b is None:
+                return a
+            return f(a, b)
+
+        return LeafFaults(
+            stuck_mask_pos=comb(
+                self.stuck_mask_pos, other.stuck_mask_pos, jnp.logical_or
+            ),
+            stuck_val_pos=comb(self.stuck_val_pos, other.stuck_val_pos, jnp.maximum),
+            stuck_mask_neg=comb(
+                self.stuck_mask_neg, other.stuck_mask_neg, jnp.logical_or
+            ),
+            stuck_val_neg=comb(self.stuck_val_neg, other.stuck_val_neg, jnp.maximum),
+            cap_pos=comb(self.cap_pos, other.cap_pos, jnp.minimum),
+            cap_neg=comb(self.cap_neg, other.cap_neg, jnp.minimum),
+            retain_pos=comb(self.retain_pos, other.retain_pos, jnp.minimum),
+            retain_neg=comb(self.retain_neg, other.retain_neg, jnp.minimum),
+            iv_strength=comb(self.iv_strength, other.iv_strength, jnp.maximum),
+        )
+
+    def _apply_device(self, g, mask, val, cap, retain, code_max: int):
+        gf = g.astype(jnp.float32)
+        if retain is not None:
+            gf = jnp.round(gf * retain.astype(jnp.float32))
+        if self.iv_strength is not None:
+            s = jnp.asarray(self.iv_strength, jnp.float32)
+            s = s.reshape(s.shape + (1,) * (gf.ndim - s.ndim))
+            ss = jnp.maximum(s, 1e-6)
+            u = gf / float(code_max)
+            bent = jnp.round(float(code_max) * jnp.sinh(ss * u) / jnp.sinh(ss))
+            gf = jnp.where(s > 0.0, bent, gf)
+        if cap is not None:
+            gf = jnp.minimum(gf, cap.astype(jnp.float32))
+        if mask is not None:
+            gf = jnp.where(mask, val.astype(jnp.float32), gf)
+        return jnp.clip(jnp.round(gf), 0, code_max).astype(jnp.uint8)
+
+    def apply(self, xw: rram.CrossbarWeight, cfg: rram.RramConfig):
+        """The faulty read-back view of one leaf's codes. The input codes
+        are never mutated; the per-column scale is untouched (faults live
+        in the analog cells, not the digital periphery)."""
+        if all(getattr(self, f) is None for f in _FIELDS):
+            return xw
+        cm = int(cfg.code_max)
+        return rram.CrossbarWeight(
+            self._apply_device(
+                xw.g_pos, self.stuck_mask_pos, self.stuck_val_pos,
+                self.cap_pos, self.retain_pos, cm,
+            ),
+            self._apply_device(
+                xw.g_neg, self.stuck_mask_neg, self.stuck_val_neg,
+                self.cap_neg, self.retain_neg, cm,
+            ),
+            xw.scale,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+class FaultMap:
+    """Path-string -> ``LeafFaults`` for a whole model (or fleet). A
+    registered pytree: stacked fleet maps vmap/slice like the stacked
+    codes they describe."""
+
+    def __init__(self, leaves: Dict[str, LeafFaults]):
+        self.leaves = dict(leaves)
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.leaves))
+        return tuple(self.leaves[k] for k in keys), keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        return cls(dict(zip(keys, children)))
+
+    def compose(self, other: "FaultMap") -> "FaultMap":
+        """Merge two maps leaf-by-leaf (``LeafFaults.compose`` on shared
+        paths). Commutative and idempotent like the leaf join."""
+        merged = dict(self.leaves)
+        for path, lf in other.leaves.items():
+            merged[path] = merged[path].compose(lf) if path in merged else lf
+        return FaultMap(merged)
+
+    __or__ = compose
+
+    def __len__(self) -> int:
+        return len(self.leaves)
+
+    def __repr__(self) -> str:
+        return f"FaultMap({len(self.leaves)} leaves)"
+
+
+def compose_maps(maps) -> Optional[FaultMap]:
+    """Fold a sequence of maps into one composite (None for empty)."""
+    out: Optional[FaultMap] = None
+    for m in maps:
+        if m is None:
+            continue
+        out = m if out is None else out.compose(m)
+    return out
+
+
+def apply_fault_map(tree, fmap: Optional[FaultMap], cfg: rram.RramConfig):
+    """Derive the faulty codes view of ``tree``: every ``CrossbarWeight``
+    leaf with an entry in ``fmap`` is read back through its fault record;
+    everything else passes through as the same buffers. ``None`` is the
+    healthy identity."""
+    if fmap is None:
+        return tree
+
+    def leaf(path, x):
+        if not isinstance(x, rram.CrossbarWeight):
+            return x
+        lf = fmap.leaves.get(_path_str(path))
+        if lf is None:
+            return x
+        return lf.apply(x, cfg)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, tree, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )

@@ -301,6 +301,10 @@ class Fleet:
         self.opt_state: Optional[Pytree] = None
         self.steps: List[int] = [0] * self.n_chips
         self.drift_hours: List[List[float]] = [[] for _ in range(self.n_chips)]
+        # fault lifecycle: (spec, chips) events, and the composed
+        # full-chip-axis map re-derived from them
+        self.fault_events: List[Tuple[Any, Tuple[int, ...]]] = []
+        self._fault_map = None
         self._refresh_base()
         self._proxy_ref = self._gamma_norms()
 
@@ -336,10 +340,17 @@ class Fleet:
         return jax.random.fold_in(self.program_key, int(i))
 
     def _refresh_base(self):
+        # stacked analogue of Deployment._refresh_base: pristine stacked
+        # codes stay the drift clock's ground truth, consumers (batched
+        # forwards, calibration, the drift/hard-fault proxies) read the
+        # faulty view
+        self.codes_view = substrate.faulted_codes(
+            self.codes, self._fault_map, self.cfg.rram
+        )
         if self.backend == "dequant":
-            self.base = _dequant_like(self.codes, self.teacher_base)
+            self.base = _dequant_like(self.codes_view, self.teacher_base)
         else:
-            self.base = self.codes
+            self.base = self.codes_view
         self._base_axes = chip_axes(self.base)
         self._codes_axes = chip_axes(self.codes)
 
@@ -414,17 +425,54 @@ class Fleet:
             )
             new = drift(sub, keys, sig, ev)
             self.codes = _put(self.codes, idx, new)
-            # refresh the read-back for the AFFECTED rows only — a
-            # single-chip tick must not re-dequantize the whole fleet
-            if self.backend == "dequant":
+            if self._fault_map is not None:
+                # faulted fleet: re-derive the faulty view (stuck cells
+                # must stay pinned over the freshly drifted codes)
+                self._refresh_base()
+            elif self.backend == "dequant":
+                # refresh the read-back for the AFFECTED rows only — a
+                # single-chip tick must not re-dequantize the whole fleet
                 self.base = _put(
                     self.base, idx, _dequant_like(new, self.teacher_base)
                 )
+                self.codes_view = self.codes
             else:
-                self.base = self.codes
+                self.base = self.codes_view = self.codes
         for c, h in active:
             self.drift_hours[c].append(h)
         return self
+
+    # -- fault injection -----------------------------------------------------
+
+    def inject(self, faults, chips=None) -> "Fleet":
+        """Inject device faults (a ``FaultSpec`` or a sequence) into
+        ``chips`` (default: all) — a lifecycle event like drift,
+        recorded for snapshot/restore replay. Each selected chip draws
+        from ``fold_in(spec_key, chip)`` and non-selected chips get
+        exact-identity map rows, so chip ``i``'s faulty view is bitwise
+        what ``Deployment.inject(spec.for_chip(i))`` produces on the
+        solo chip. Pristine stacked codes are untouched; the composed
+        map re-applies at read-back, so stuck cells stay pinned through
+        ``advance`` and repeat injection is a no-op."""
+        specs = list(faults) if isinstance(faults, (list, tuple)) else [faults]
+        chip_list = tuple(self._chip_list(chips))
+        for spec in specs:
+            self.fault_events.append((spec, chip_list))
+        self._rebuild_fault_map()
+        self._refresh_base()
+        return self
+
+    def _rebuild_fault_map(self):
+        from repro.faults import build_fleet_map, compose_maps
+
+        if not self.fault_events:
+            self._fault_map = None
+            return
+        per_chip = _take(self.codes, 0)  # per-chip leaf shapes template
+        self._fault_map = compose_maps(
+            build_fleet_map(per_chip, spec, self.cfg.rram, chips, self.n_chips)
+            for spec, chips in self.fault_events
+        )
 
     # -- batched calibration -------------------------------------------------
 
@@ -519,7 +567,9 @@ class Fleet:
                 out.append(substrate.code_column_norms(x))
             return x
 
-        jax.tree_util.tree_map(leaf, self.codes, is_leaf=_is_cw)
+        # norms read the FAULTY view: the proxies must see what the
+        # forwards (and the merged DoRA γ) actually read back
+        jax.tree_util.tree_map(leaf, self.codes_view, is_leaf=_is_cw)
         return out
 
     def drift_proxy(self) -> np.ndarray:
@@ -536,6 +586,24 @@ class Fleet:
             rel = jnp.abs(now - ref) / jnp.maximum(jnp.abs(ref), 1e-8)
             vals.append(jnp.mean(rel.reshape(self.n_chips, -1), axis=1))
         return np.asarray(jnp.mean(jnp.stack(vals), axis=0))
+
+    def hard_fault_proxy(self) -> np.ndarray:
+        """(n_chips,) hard-fault signal: MAX relative movement of any
+        single code column norm since the chip's last calibration.
+
+        Drift is a diffusion — per-column norm movement is small and
+        DISTRIBUTED, so even the worst column moves only a few standard
+        errors above the mean the drift proxy reads. Stuck/saturated/
+        retention-hit cells instead slam individual columns (a cell
+        pinned to LRS jumps that one column's norm by tens of percent),
+        a localized jump drift alone cannot produce. The scheduler
+        thresholds this separately to tell "drifted — recalibrate"
+        from "hard-faulted — recalibrate harder and flag the chip"."""
+        vals = []
+        for now, ref in zip(self._gamma_norms(), self._proxy_ref):
+            rel = jnp.abs(now - ref) / jnp.maximum(jnp.abs(ref), 1e-8)
+            vals.append(jnp.max(rel.reshape(self.n_chips, -1), axis=1))
+        return np.asarray(jnp.max(jnp.stack(vals), axis=0))
 
     def logit_mse(self, batch: Dict, *, use_adapters: bool = True) -> np.ndarray:
         """(n_chips,) teacher/student logit MSE — the fleet-wide
@@ -578,6 +646,14 @@ class Fleet:
             dep.opt_state = jax.tree_util.tree_map(
                 lambda x: x[i], self.opt_state
             )
+        # replay this chip's fault events with the chip index folded in —
+        # bitwise the fleet map's row i by the shared per-chip keying
+        specs = [
+            spec.for_chip(i) for spec, chips in self.fault_events
+            if i in chips
+        ]
+        if specs:
+            dep.inject(specs)
         return dep
 
     def serve(self, chip: int) -> serving.ServeSession:
@@ -638,6 +714,10 @@ class Fleet:
             "format": 1, "backend": self.backend,
             "arch": getattr(self.cfg, "name", None),
             "n_chips": self.n_chips,
+            "fault_events": [
+                [spec.to_dict(), list(chips)]
+                for spec, chips in self.fault_events
+            ],
         }
         with open(os.path.join(manager.directory, _FLEET_META), "w") as f:
             json.dump(meta, f)
@@ -685,6 +765,13 @@ class Fleet:
         for r in range(int(counts.max()) if counts.size else 0):
             chips = [c for c in range(n_chips) if counts[c] > r]
             fleet.advance([float(padded[c, r]) for c in chips], chips=chips)
+        for event in meta.get("fault_events") or []:
+            # commutes with drift replay: faults never touch the
+            # pristine codes, the view re-derives after every event
+            from repro.faults import FaultSpec
+
+            spec_dict, chips = event
+            fleet.inject(FaultSpec.from_dict(spec_dict), chips=chips)
         restored = manager.restore(
             step,
             {"adapters": fleet.adapters,

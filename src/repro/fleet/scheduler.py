@@ -32,14 +32,19 @@ from repro.fleet.fleet import Fleet, FleetCalibrationReport
 
 @dataclasses.dataclass
 class TickRecord:
-    """One maintenance tick: what aged, what the proxy read, who was
-    recalibrated (empty list: nobody crossed the threshold)."""
+    """One maintenance tick: what aged, what the proxies read, who was
+    recalibrated on which path (empty lists: nobody crossed a
+    threshold). ``hard_faulted`` chips took the hard-fault path
+    (``hard_calib_args``); ``recalibrated`` lists the drift path only."""
 
     tick: int
     hours: List[float]            # per-chip elapsed hours this tick
     proxy: np.ndarray             # (n_chips,) drift proxy AFTER aging
     recalibrated: List[int]
     report: Optional[FleetCalibrationReport]
+    hard_proxy: Optional[np.ndarray] = None   # (n_chips,) max-column jump
+    hard_faulted: List[int] = dataclasses.field(default_factory=list)
+    hard_report: Optional[FleetCalibrationReport] = None
 
 
 @dataclasses.dataclass
@@ -67,17 +72,35 @@ class FleetReport:
     # array endurance with every one of them.
     sram_lifespan_calibrations: float
     rram_lifespan_calibrations: float
+    # hard-fault accounting (non-ideality suite): drift-path vs
+    # hard-fault-path recalibrations sum to ``recalibrations``;
+    # ``hard_faulted_chips`` stay flagged for the fleet's lifetime —
+    # DoRA recovers their accuracy without an RRAM rewrite, but the
+    # damage is physical and the operator should schedule replacement.
+    hard_threshold: Optional[float] = None
+    drift_recalibrations: int = 0
+    hard_recalibrations: int = 0
+    per_chip_hard_recalibrations: List[int] = dataclasses.field(
+        default_factory=list
+    )
+    hard_faulted_chips: List[int] = dataclasses.field(default_factory=list)
+    per_chip_hard_proxy: List[float] = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
         avoided_pct = (
             100.0 * self.recalibrations_avoided
             / max(self.naive_recalibrations, 1)
         )
+        hard = (
+            f" | hard-faulted chips {self.hard_faulted_chips} "
+            f"({self.hard_recalibrations} hard-path recalibrations)"
+            if self.hard_faulted_chips else ""
+        )
         return (
             f"fleet of {self.n_chips}: {self.ticks} ticks, "
             f"{self.recalibrations} recalibrations "
             f"({self.recalibrations_avoided} avoided vs naive "
-            f"fixed-interval = {avoided_pct:.0f}%) | "
+            f"fixed-interval = {avoided_pct:.0f}%){hard} | "
             f"sram_bytes={self.sram_bytes} rram_bytes={self.rram_bytes} | "
             f"lifespan: {self.sram_lifespan_calibrations:.2e} SRAM "
             f"calibrations vs {self.rram_lifespan_calibrations:.2e} "
@@ -95,20 +118,50 @@ class RecalibrationScheduler:
 
     ``calib_args`` are forwarded to ``Fleet.calibrate`` for the
     triggered chips (``batch_or_samples``, ``steps``, ``lr``,
-    ``seq_len``, ...)."""
+    ``seq_len``, ...).
+
+    Hard-fault discrimination (``hard_threshold``): the scheduler also
+    reads ``Fleet.hard_fault_proxy`` — the MAX single-column norm jump,
+    a signature drift's distributed diffusion cannot produce — and
+    routes chips crossing it down a separate path: recalibrate with
+    ``hard_calib_args`` (default: ``calib_args`` with DOUBLE the steps —
+    the stacked fleet shares one adapter shape, so the extra capacity
+    comes from calibration effort, not a rank change) and flag the chip
+    in ``FleetReport.hard_faulted_chips``. A hard-faulted chip is
+    excluded from the drift path that tick. ``hard_threshold=None``
+    disables the hard path entirely (legacy behaviour)."""
 
     def __init__(
         self, fleet: Fleet, *, threshold: float,
         calib_args: Optional[Dict[str, Any]] = None,
+        hard_threshold: Optional[float] = None,
+        hard_calib_args: Optional[Dict[str, Any]] = None,
     ):
         if threshold <= 0:
             raise ValueError(f"threshold must be > 0, got {threshold}")
+        if hard_threshold is not None and hard_threshold <= threshold:
+            raise ValueError(
+                f"hard_threshold ({hard_threshold}) must exceed the drift "
+                f"threshold ({threshold}) — the hard signal is a max over "
+                f"columns and dominates the mean the drift proxy reads"
+            )
         self.fleet = fleet
         self.threshold = float(threshold)
         self.calib_args = dict(calib_args or {})
+        self.hard_threshold = (
+            None if hard_threshold is None else float(hard_threshold)
+        )
+        if hard_calib_args is None:
+            hard_calib_args = dict(self.calib_args)
+            hard_calib_args["steps"] = 2 * int(
+                self.calib_args.get("steps", 20)
+            )
+        self.hard_calib_args = dict(hard_calib_args)
         self.history: List[TickRecord] = []
         self._last_loss = np.full(fleet.n_chips, np.nan, np.float64)
         self._per_chip_recals = [0] * fleet.n_chips
+        self._per_chip_hard_recals = [0] * fleet.n_chips
+        self._hard_flagged: set = set()
 
     @property
     def ticks(self) -> int:
@@ -116,7 +169,8 @@ class RecalibrationScheduler:
 
     @property
     def recalibrations(self) -> int:
-        return sum(self._per_chip_recals)
+        """Total recalibrations, both paths."""
+        return sum(self._per_chip_recals) + sum(self._per_chip_hard_recals)
 
     @property
     def naive_recalibrations(self) -> int:
@@ -128,9 +182,10 @@ class RecalibrationScheduler:
         self, hours: Union[float, Sequence[float]], chips=None,
     ) -> TickRecord:
         """One maintenance interval: age ``chips`` (default all) by
-        ``hours`` (scalar or per-chip), read the drift proxy, and
-        recalibrate exactly the chips whose proxy exceeds the
-        threshold."""
+        ``hours`` (scalar or per-chip), read the proxies, and
+        recalibrate exactly the chips whose proxy exceeds a threshold —
+        hard-faulted chips down the hard path, merely drifted ones down
+        the drift path, healthy ones not at all."""
         fleet = self.fleet
         fleet.advance(hours, chips=chips)
         chip_list = fleet._chip_list(chips)
@@ -142,16 +197,35 @@ class RecalibrationScheduler:
         for c, h in zip(chip_list, hlist):
             per_chip_hours[c] = h
         proxy = fleet.drift_proxy()
-        due = [int(c) for c in np.flatnonzero(proxy > self.threshold)]
+        hard_proxy = None
+        hard_due: List[int] = []
+        if self.hard_threshold is not None:
+            hard_proxy = fleet.hard_fault_proxy()
+            hard_due = [
+                int(c) for c in np.flatnonzero(hard_proxy > self.hard_threshold)
+            ]
+        due = [
+            int(c) for c in np.flatnonzero(proxy > self.threshold)
+            if int(c) not in hard_due
+        ]
         report = None
         if due:
             report = fleet.calibrate(chips=due, **self.calib_args)
             for j, c in enumerate(due):
                 self._per_chip_recals[c] += 1
                 self._last_loss[c] = float(report.final_loss[j])
+        hard_report = None
+        if hard_due:
+            hard_report = fleet.calibrate(chips=hard_due, **self.hard_calib_args)
+            for j, c in enumerate(hard_due):
+                self._per_chip_hard_recals[c] += 1
+                self._last_loss[c] = float(hard_report.final_loss[j])
+                self._hard_flagged.add(c)
         record = TickRecord(
             tick=len(self.history), hours=per_chip_hours,
             proxy=proxy, recalibrated=due, report=report,
+            hard_proxy=hard_proxy, hard_faulted=hard_due,
+            hard_report=hard_report,
         )
         self.history.append(record)
         return record
@@ -175,6 +249,12 @@ class RecalibrationScheduler:
         proxy = (
             self.history[-1].proxy if self.history else fleet.drift_proxy()
         )
+        if self.hard_threshold is None:
+            hard_proxy = [float("nan")] * fleet.n_chips
+        elif self.history and self.history[-1].hard_proxy is not None:
+            hard_proxy = [float(p) for p in self.history[-1].hard_proxy]
+        else:
+            hard_proxy = [float(p) for p in fleet.hard_fault_proxy()]
         return FleetReport(
             n_chips=fleet.n_chips,
             ticks=self.ticks,
@@ -200,4 +280,10 @@ class RecalibrationScheduler:
             rram_lifespan_calibrations=rram.lifespan_calibrations(
                 samples=int(samples), epochs=epochs, on_rram=True
             ),
+            hard_threshold=self.hard_threshold,
+            drift_recalibrations=sum(self._per_chip_recals),
+            hard_recalibrations=sum(self._per_chip_hard_recals),
+            per_chip_hard_recalibrations=list(self._per_chip_hard_recals),
+            hard_faulted_chips=sorted(self._hard_flagged),
+            per_chip_hard_proxy=hard_proxy,
         )

@@ -27,6 +27,8 @@ from repro.substrate.exec import (  # noqa: F401
     code_column_norms,
     default_interpret,
     dora_gamma,
+    faulted_codes,
+    faulted_view,
     rimc_linear,
     rimc_mvm_adc,
 )

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import dora as dora_lib
 from repro.core.dora import AdapterConfig
-from repro.core.rram import CrossbarWeight, dequantize
+from repro.core.rram import CrossbarWeight, RramConfig, dequantize
 from repro.substrate import exec as X
 from repro.substrate.prepared import (
     PreparedCrossbar,
@@ -224,19 +224,52 @@ class CodesBackend(Backend):
         )
 
 
+_ADC_DEFAULTS = RramConfig()
+
+
+def resolve_adc_limits(rram_cfg, code_max, adc_bits):
+    """Single source of truth for the ADC-faithful backend's limits: the
+    deployment's ``RramConfig``. An explicit ``code_max``/``adc_bits``
+    that CONFLICTS with a provided config raises (it used to be silently
+    accepted, letting a session serve with an ADC the array was never
+    programmed for); with no config, explicit values apply and the
+    defaults mirror ``RramConfig()``."""
+    if rram_cfg is not None:
+        for name, explicit, want in (
+            ("code_max", code_max, rram_cfg.code_max),
+            ("adc_bits", adc_bits, rram_cfg.adc_bits),
+        ):
+            if explicit is not None and int(explicit) != int(want):
+                raise ValueError(
+                    f"codes_adc {name}={explicit} conflicts with the "
+                    f"deployment's RramConfig.{name}={want}; the RramConfig "
+                    f"is the single source of truth — drop the override or "
+                    f"change the config"
+                )
+        return int(rram_cfg.code_max), int(rram_cfg.adc_bits)
+    return (
+        int(_ADC_DEFAULTS.code_max if code_max is None else code_max),
+        int(_ADC_DEFAULTS.adc_bits if adc_bits is None else adc_bits),
+    )
+
+
 @register_backend
 class CodesAdcBackend(Backend):
     """ADC-faithful analog chain: saturating ADC per 256-row crossbar
     activation (kernels/crossbar_mvm.py), then the DoRA compensation is
     applied digitally — exactly the paper's periphery split.
 
-    ``code_max``/``adc_bits`` must match the deployment's RramConfig
-    (launch/serve.py passes them via ``use_backend`` options); the
-    defaults mirror ``RramConfig()``."""
+    ``code_max``/``adc_bits`` come from the deployment's ``RramConfig``
+    (pass ``rram_cfg=`` or let ``serving.backend_scope`` plumb it);
+    conflicting explicit overrides raise via ``resolve_adc_limits``."""
 
     name = "codes_adc"
 
-    def linear(self, x, xw, adapter, acfg, *, code_max=255, adc_bits=8):
+    def linear(
+        self, x, xw, adapter, acfg, *,
+        rram_cfg=None, code_max=None, adc_bits=None,
+    ):
+        code_max, adc_bits = resolve_adc_limits(rram_cfg, code_max, adc_bits)
         if isinstance(xw, PreparedCrossbar):
             raise TypeError(
                 "codes_adc reads raw per-leaf codes; prepared (fused/"

@@ -57,6 +57,36 @@ def code_column_norms(xw: CrossbarWeight) -> jax.Array:
     return jnp.sqrt(jnp.sum(w * w, axis=-2))
 
 
+def faulted_view(xw: CrossbarWeight, leaf_faults, cfg) -> CrossbarWeight:
+    """The faulty read-back view of one leaf's codes: retention decay,
+    I-V read distortion, saturation clamps and stuck pins applied on the
+    code grid (``repro/faults/map.py``), per-column scale untouched.
+
+    This is the single-leaf read-back choke point of the non-ideality
+    suite: the pristine resident codes are NEVER mutated — drift keeps
+    operating on them — and every consumer (all three backends, the
+    prepared/fused serve path, the fleet's drift proxy) reads the view
+    this function derives, so backend parity under faults is bitwise by
+    construction. ``leaf_faults=None`` is the healthy identity."""
+    if leaf_faults is None:
+        return xw
+    return leaf_faults.apply(xw, cfg)
+
+
+def faulted_codes(tree, fault_map, cfg):
+    """Tree-level ``faulted_view``: derive the faulty codes view of a
+    whole base tree through a composed ``FaultMap`` (``None`` = healthy,
+    returns the tree unchanged). ``Deployment._refresh_base`` /
+    ``Fleet._refresh_base`` call this after every programming, drift or
+    injection event; ``prepare_base_for_serve(faults=...)`` routes the
+    serve-time fast path through the same derivation."""
+    if fault_map is None:
+        return tree
+    from repro.faults.map import apply_fault_map
+
+    return apply_fault_map(tree, fault_map, cfg)
+
+
 def dora_gamma(xw: CrossbarWeight, adapter: dict) -> jax.Array:
     """Merged DoRA scale M/||W_r + A@B|| (Algorithm 2 line 12), shape (1,N)."""
     w = dequantize(xw)

@@ -261,14 +261,25 @@ def _fusable(b: dict, keys: Tuple[str, ...]) -> bool:
 
 def prepare_base_for_serve(
     base, adapters, cfg, *, int8: bool = False,
-    align: Optional[Tuple[int, int]] = None,
+    align: Optional[Tuple[int, int]] = None, faults=None,
 ):
     """Swap every servable RRAM leaf of ``base`` for its
     ``PreparedCrossbar`` form, fusing same-input sibling leaves. The
     input trees are not mutated; ``adapters`` must be the merged tree
-    (``merge_adapters_for_serve``) so gammas bake in exactly."""
+    (``merge_adapters_for_serve``) so gammas bake in exactly.
+
+    ``faults`` (a composed ``FaultMap``) derives the faulty read-back
+    view of ``base`` BEFORE any padding/fusion, so the prepared fast
+    path serves bitwise the same faulty codes the raw backends read.
+    ``Deployment.serve`` pre-applies its map (``self.base`` is already
+    the faulty view); the parameter is for direct callers preparing a
+    pristine tree."""
     acfg = cfg.adapter
     align = serve_alignment() if align is None else align
+    if faults is not None:
+        from repro.substrate.exec import faulted_codes
+
+        base = faulted_codes(base, faults, cfg.rram)
 
     def walk(b, a, cross=False):
         if _servable(b):

@@ -1,0 +1,358 @@
+"""Non-ideality suite (ISSUE 7): fault generators are deterministic and
+replayable, faults apply at code read-back so every backend and the
+prepared/fused serve path see bitwise-identical faulty weights, stuck
+cells survive drift, injection is idempotent, snapshot/restore replays
+fault events, and ``Fleet.inject`` is bitwise N independent
+``Deployment.inject`` runs."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import rram
+from repro.core.calibrate import merge_adapters_for_serve
+from repro.deploy import Deployment, serving
+from repro.deploy.deployment import calibration_batch
+from repro.faults import (
+    FaultSpec,
+    apply_fault_map,
+    build_map,
+    fault_recovery_study,
+    iv_nonlinearity,
+    retention,
+    saturated,
+    stuck_at,
+)
+from repro.fleet import Fleet
+from repro.models import transformer as T
+from repro import substrate
+
+
+def _cfg():
+    return get_arch("qwen3_1_7b").smoke
+
+
+def _spec(kind, seed=3):
+    return {
+        "stuck_at": lambda: stuck_at(seed, rate=0.03),
+        "saturated": lambda: saturated(seed, rate=0.10, cap_fraction=0.6),
+        "retention": lambda: retention(seed, rate=0.10, retain=0.5),
+        "iv_nonlinearity": lambda: iv_nonlinearity(1.5),
+    }[kind]()
+
+
+KINDS = ("stuck_at", "saturated", "retention", "iv_nonlinearity")
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb) and len(la) > 0
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- generators ---------------------------------------------------------------
+
+
+def test_specs_deterministic_and_json_round_trip():
+    cfg = _cfg()
+    dep = Deployment.program(cfg, 0, backend="codes")
+    for kind in KINDS:
+        spec = _spec(kind)
+        again = FaultSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+        assert again == spec
+        m1 = build_map(dep.codes, spec, cfg.rram)
+        m2 = build_map(dep.codes, again, cfg.rram)
+        _assert_trees_equal(m1, m2)
+        v1 = apply_fault_map(dep.codes, m1, cfg.rram)
+        v2 = apply_fault_map(dep.codes, m2, cfg.rram)
+        _assert_trees_equal(v1, v2)
+
+
+def test_generator_validation():
+    with pytest.raises(ValueError):
+        stuck_at(0, rate=1.5)
+    with pytest.raises(ValueError):
+        saturated(0, rate=0.1, cap_fraction=0.0)
+    with pytest.raises(ValueError):
+        retention(0, rate=-0.1)
+    with pytest.raises(ValueError):
+        iv_nonlinearity(-1.0)
+    with pytest.raises(ValueError):
+        build_map(
+            Deployment.program(_cfg(), 0).codes,
+            FaultSpec(kind="nope", params=(("rate", 0.1),), key_data=(0, 1)),
+            _cfg().rram,
+        )
+
+
+# -- read-back choke point: identical faulty view everywhere -----------------
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_faulty_view_bitwise_identical_across_backends(kind):
+    """All three backends derive their faulty weights from the SAME
+    uint8 codes view — the read-back choke point makes parity bitwise
+    by construction."""
+    cfg = _cfg()
+    spec = _spec(kind)
+    deps = {
+        b: Deployment.program(cfg, 0, backend=b).advance(50.0).inject(spec)
+        for b in ("codes", "dequant", "codes_adc")
+    }
+    for b in ("dequant", "codes_adc"):
+        _assert_trees_equal(deps["codes"].codes_view, deps[b].codes_view)
+    # the dequant base is exactly the float read-back of the shared view
+    w_view = deps["codes"].codes_view["body"][0]["mixer"]["q"]["w"]
+    w_deq = deps["dequant"].base["body"][0]["mixer"]["q"]["w"]
+    np.testing.assert_array_equal(
+        np.asarray(rram.dequantize(w_view, dtype=w_deq.dtype)),
+        np.asarray(w_deq),
+    )
+    # pristine codes untouched by injection
+    _assert_trees_equal(deps["codes"].codes, deps["dequant"].codes)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_backend_forward_parity_under_faults(kind):
+    """End-to-end forwards under faults stay within the established
+    codes-vs-dequant kernel tolerance (the weights are bitwise shared;
+    only accumulation order differs)."""
+    cfg = _cfg()
+    spec = _spec(kind)
+    batch = calibration_batch(cfg, 2, 8)
+    dep_c = Deployment.program(cfg, 0, backend="codes").advance(50.0)
+    dep_d = Deployment.program(cfg, 0, backend="dequant").advance(50.0)
+    dep_c.inject(spec)
+    dep_d.inject(spec)
+    outs = {}
+    for name, dep in (("codes", dep_c), ("dequant", dep_d)):
+        with serving.backend_scope(dep.backend, cfg):
+            outs[name] = np.asarray(
+                T.forward(
+                    {"base": dep.base, "adapters": dep.adapters}, batch, cfg
+                ).astype(jnp.float32)
+            )
+    rel = np.linalg.norm(outs["codes"] - outs["dequant"]) / np.linalg.norm(
+        outs["dequant"]
+    )
+    assert rel < 0.05
+    # the ADC-faithful chain runs on the same faulty view and stays finite
+    assert np.isfinite(dep_c.logit_mse(batch))
+
+
+@pytest.mark.parametrize("kind", ["stuck_at", "iv_nonlinearity"])
+def test_prepared_serve_path_bitwise_under_faults(kind):
+    """The serve-time prepared/fused tree built from the deployment's
+    (pre-applied) faulty base is bitwise the tree built from PRISTINE
+    codes through ``prepare_base_for_serve(faults=...)`` — the fast
+    path cannot drift from the raw backends under faults."""
+    cfg = _cfg()
+    dep = Deployment.program(cfg, 0, backend="codes").advance(50.0)
+    dep.inject(_spec(kind))
+    merged = merge_adapters_for_serve(dep.base, dep.adapters)
+    prep_applied = substrate.prepare_base_for_serve(dep.base, merged, cfg)
+    prep_routed = substrate.prepare_base_for_serve(
+        dep.codes, merged, cfg, faults=dep._fault_map
+    )
+    _assert_trees_equal(prep_applied, prep_routed)
+    # and the session built on it serves
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 4), 0, cfg.vocab)
+    logits, _ = dep.serve().prefill(prompt, 6)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+# -- lifecycle semantics ------------------------------------------------------
+
+
+def test_injection_idempotent_and_order_independent():
+    cfg = _cfg()
+    s1, s2 = _spec("stuck_at"), _spec("saturated", seed=9)
+    a = Deployment.program(cfg, 0, backend="codes").inject([s1, s2])
+    b = Deployment.program(cfg, 0, backend="codes").inject([s2, s1])
+    _assert_trees_equal(a.codes_view, b.codes_view)
+    a.inject(s1)  # re-injecting an already-present fault changes nothing
+    _assert_trees_equal(a.codes_view, b.codes_view)
+
+
+def test_stuck_cells_stay_pinned_through_drift():
+    cfg = _cfg()
+    spec = stuck_at(5, rate=0.05, lrs_fraction=1.0)  # all stuck at LRS
+    dep = Deployment.program(cfg, 0, backend="codes").inject(spec)
+    fmap = dep._fault_map
+    path, lf = next(iter(sorted(fmap.leaves.items())))
+    mask = np.asarray(lf.stuck_mask_pos)
+    assert mask.any()
+
+    def pinned(view):
+        for p, xw in _walk_cw(view):
+            if p == path:
+                return np.asarray(xw.g_pos)[mask]
+        raise AssertionError(path)
+
+    cm = cfg.rram.code_max
+    assert (pinned(dep.codes_view) == cm).all()
+    dep.advance(200.0)  # drift moves the pristine codes...
+    assert (pinned(dep.codes_view) == cm).all()  # ...the view stays pinned
+    # and the pristine codes did NOT get pinned
+    assert not (pinned(dep.codes) == cm).all()
+
+
+def _walk_cw(tree):
+    from repro.core.calibrate import _path_str
+
+    out = []
+
+    def visit(p, x):
+        if isinstance(x, rram.CrossbarWeight):
+            out.append((_path_str(p), x))
+        return x
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+    )
+    return out
+
+
+def test_snapshot_restore_replays_fault_events(tmp_path):
+    cfg = _cfg()
+    dep = Deployment.program(cfg, 0, backend="codes")
+    dep.advance(24.0)
+    dep.inject([_spec("stuck_at"), _spec("retention", seed=11)])
+    dep.calibrate(2, steps=2, seq_len=8)
+    dep.advance(12.0)
+    dep.snapshot(str(tmp_path))
+
+    restored = Deployment.restore(cfg, str(tmp_path))
+    assert [s.to_dict() for s in restored.fault_specs] == [
+        s.to_dict() for s in dep.fault_specs
+    ]
+    _assert_trees_equal(dep.codes, restored.codes)
+    _assert_trees_equal(dep.codes_view, restored.codes_view)
+    _assert_trees_equal(dep.adapters, restored.adapters)
+    batch = calibration_batch(cfg, 2, 8)
+    assert dep.logit_mse(batch) == restored.logit_mse(batch)
+
+
+# -- fleet parity (acceptance) ------------------------------------------------
+
+
+def test_fleet_inject_bitwise_matches_independent_deployments():
+    """``Fleet.inject`` on N chips == N independent ``Deployment.inject``
+    runs with the chip-folded specs, bitwise — and untouched chips stay
+    bitwise pristine."""
+    cfg = _cfg()
+    n = 3
+    fleet = Fleet.program(cfg, 0, n_chips=n, backend="codes")
+    fleet.advance([100.0, 300.0, 6.0])
+    spec = stuck_at(7, rate=0.04)
+    ivs = iv_nonlinearity(1.2)
+    fleet.inject(spec, chips=[0, 2])
+    fleet.inject(ivs, chips=[1])
+    hours = [100.0, 300.0, 6.0]
+    for i in range(n):
+        dep = Deployment.program(
+            cfg, (fleet.teacher_key, fleet.chip_key(i)), backend="codes"
+        )
+        dep.advance(hours[i])
+        if i in (0, 2):
+            dep.inject(spec.for_chip(i))
+        else:
+            dep.inject(ivs)
+        chip = fleet.chip(i)
+        _assert_trees_equal(dep.codes, chip.codes)
+        _assert_trees_equal(dep.codes_view, chip.codes_view)
+        _assert_trees_equal(dep.base, chip.base)
+    # served logits: fleet chip vs solo chip, bitwise
+    prompt = jax.random.randint(jax.random.PRNGKey(4), (1, 4), 0, cfg.vocab)
+    dep0 = Deployment.program(
+        cfg, (fleet.teacher_key, fleet.chip_key(0)), backend="codes"
+    ).advance(100.0).inject(spec.for_chip(0))
+    l_solo, _ = dep0.serve().prefill(prompt, 6)
+    l_fleet, _ = fleet.serve(0).prefill(prompt, 6)
+    np.testing.assert_array_equal(np.asarray(l_solo), np.asarray(l_fleet))
+
+
+def test_fleet_snapshot_restore_replays_fault_events(tmp_path):
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=3, backend="codes")
+    fleet.advance([24.0, 168.0, 6.0])
+    fleet.inject(stuck_at(7, rate=0.04), chips=[1])
+    fleet.calibrate(2, steps=2, seq_len=8, chips=[0, 1])
+    fleet.snapshot(str(tmp_path))
+
+    restored = Fleet.restore(cfg, str(tmp_path))
+    assert [
+        (s.to_dict(), list(c)) for s, c in restored.fault_events
+    ] == [(s.to_dict(), list(c)) for s, c in fleet.fault_events]
+    _assert_trees_equal(fleet.codes, restored.codes)
+    _assert_trees_equal(fleet.codes_view, restored.codes_view)
+    np.testing.assert_array_equal(
+        fleet.hard_fault_proxy(), restored.hard_fault_proxy()
+    )
+
+
+def test_fleet_hard_fault_proxy_separates_faults_from_drift():
+    """The max-column-jump proxy fires on a stuck chip far above a
+    merely drifted chip; the mean drift proxy cannot tell them apart as
+    cleanly — that separation is what the scheduler's hard path keys
+    on."""
+    cfg = _cfg()
+    fleet = Fleet.program(cfg, 0, n_chips=3)
+    fleet.advance([50.0, 300.0, 0.0])
+    fleet.inject(stuck_at(7, rate=0.05), chips=[0])
+    hard = fleet.hard_fault_proxy()
+    assert hard[0] > 2 * hard[1]  # stuck chip dominates heavy drift
+    assert hard[2] == 0.0         # healthy chip reads zero
+
+
+# -- codes_adc limits come from RramConfig (satellite) -----------------------
+
+
+def test_backend_scope_rejects_conflicting_adc_options():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="single source of truth"):
+        serving.backend_scope("codes_adc", cfg, adc_bits=3)
+    with pytest.raises(ValueError, match="single source of truth"):
+        serving.backend_scope("codes_adc", cfg, code_max=100)
+    # matching explicit values and config-derived defaults are fine
+    with serving.backend_scope(
+        "codes_adc", cfg, adc_bits=cfg.rram.adc_bits
+    ):
+        name, opts = substrate.active_backend_key()
+        assert name == "codes_adc"
+        assert dict(opts)["code_max"] == cfg.rram.code_max
+        assert dict(opts)["adc_bits"] == cfg.rram.adc_bits
+
+
+def test_resolve_adc_limits_defaults_mirror_rram_config():
+    from repro.substrate.backends import resolve_adc_limits
+
+    assert resolve_adc_limits(None, None, None) == (255, 8)
+    assert resolve_adc_limits(None, None, 3) == (255, 3)  # no cfg: explicit ok
+    assert resolve_adc_limits(_cfg().rram, 255, None) == (255, 8)
+    with pytest.raises(ValueError):
+        resolve_adc_limits(_cfg().rram, 100, None)
+
+
+# -- recovery study -----------------------------------------------------------
+
+
+def test_study_calibration_improves_faulted_accuracy():
+    res = fault_recovery_study(
+        smoke=True, samples=2, steps=8, seq_len=8, hours=300.0,
+        classes=["stuck_at"],
+    )["stuck_at"]
+    assert res["faulted_mse"] > res["clean_mse"]          # fault degrades
+    assert res["calibrated_mse"] < res["faulted_mse"]     # DoRA recovers
+    assert res["recovered_fraction"] > 0

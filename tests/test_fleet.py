@@ -3,6 +3,8 @@ bitwise-identical to N independent ``Deployment`` runs, heterogeneous
 drift clocks commute across chips, the recalibration scheduler fires iff
 the drift proxy crosses its threshold, snapshot/restore replays exactly,
 and the batched path never retraces per chip (ISSUE 5 acceptance)."""
+import json
+
 import numpy as np
 import pytest
 
@@ -208,6 +210,52 @@ def test_scheduler_rejects_nonpositive_threshold():
     fleet = Fleet.program(_cfg(), 0, n_chips=1)
     with pytest.raises(ValueError):
         RecalibrationScheduler(fleet, threshold=0.0)
+
+
+def test_scheduler_rejects_hard_threshold_below_drift_threshold():
+    fleet = Fleet.program(_cfg(), 0, n_chips=1)
+    with pytest.raises(ValueError, match="hard_threshold"):
+        RecalibrationScheduler(fleet, threshold=0.02, hard_threshold=0.01)
+
+
+def test_scheduler_discriminates_hard_faults_from_drift():
+    """Non-ideality suite acceptance: a stuck-at chip fires the HARD
+    path (longer calibration + permanent flag), a heavily drifted but
+    healthy chip fires the DRIFT path, a fresh chip fires neither — and
+    the FleetReport accounts both paths separately."""
+    cfg = _cfg()
+    from repro.faults import stuck_at
+
+    fleet = Fleet.program(cfg, 0, n_chips=3)
+    fleet.inject(stuck_at(7, rate=0.05), chips=[0])
+    sched = RecalibrationScheduler(
+        fleet, threshold=0.02, hard_threshold=0.3,
+        calib_args={"batch_or_samples": 4, "steps": 2, "seq_len": 16},
+    )
+    # chip 0: stuck cells + mild aging; chip 1: drift only; chip 2: fresh
+    rec = sched.tick([50.0, 300.0, 0.0])
+    assert rec.hard_faulted == [0]
+    assert rec.recalibrated == [1]  # hard chip excluded from drift path
+    assert rec.hard_proxy[0] > 0.3 > rec.hard_proxy[1]
+    assert rec.hard_proxy[2] == 0.0
+    assert rec.report is not None and rec.report.chips == [1]
+    assert rec.hard_report is not None and rec.hard_report.chips == [0]
+    # hard path defaults to 2x the drift-path calibration effort
+    assert rec.hard_report.epochs_run == 2 * rec.report.epochs_run
+
+    # after compensation the proxies reset: nothing refires immediately
+    rec2 = sched.tick(0.25)
+    assert rec2.hard_faulted == [] and rec2.recalibrated == []
+
+    report = sched.report()
+    assert report.recalibrations == 2
+    assert report.drift_recalibrations == 1
+    assert report.hard_recalibrations == 1
+    assert report.per_chip_hard_recalibrations == [1, 0, 0]
+    assert report.hard_faulted_chips == [0]  # flagged for life
+    assert report.per_chip_recalibrations == [0, 1, 0]
+    assert "hard-faulted" in report.summary()
+    json.loads(report.to_json())
 
 
 def test_drift_proxy_zero_after_program_and_grows_with_age():

@@ -119,3 +119,75 @@ def test_causal_mask_properties(seed, q, kv, w):
         assert not m[i, kv - q + i + 1 :].any()  # nothing in the future
         if w is not None:
             assert m[i].sum() <= w  # window bound
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    d=st.integers(8, 32), k=st.integers(8, 32), seed=st.integers(0, 2 ** 16),
+    kinds=st.lists(
+        st.sampled_from(
+            ["stuck_at", "saturated", "retention", "iv_nonlinearity"]
+        ),
+        min_size=2, max_size=2,
+    ),
+)
+def test_fault_map_composition_order_independent_and_idempotent(
+    d, k, seed, kinds
+):
+    """Fault-map composition is a lattice join: ``m1|m2`` and ``m2|m1``
+    produce bitwise-identical faulty views, and ``m|m`` is ``m`` — so
+    the ORDER faults are injected in never changes the read-back, and
+    re-injecting an already-present fault is a no-op (what
+    ``Deployment.inject`` idempotence rides on)."""
+    from repro.faults import (
+        apply_fault_map, build_map, iv_nonlinearity, retention, saturated,
+        stuck_at,
+    )
+
+    cfg = rram.RramConfig()
+    key = jax.random.PRNGKey(seed)
+    tree = {
+        "a": rram.program(jax.random.normal(key, (d, k)) * 0.2, cfg),
+        "b": rram.program(
+            jax.random.normal(jax.random.fold_in(key, 1), (k, d)) * 0.2, cfg
+        ),
+    }
+
+    def mk(kind, s):
+        return {
+            "stuck_at": lambda: stuck_at(s, rate=0.1),
+            "saturated": lambda: saturated(s, rate=0.2, cap_fraction=0.6),
+            "retention": lambda: retention(s, rate=0.2, retain=0.5),
+            "iv_nonlinearity": lambda: iv_nonlinearity(1.0 + 0.1 * (s % 7)),
+        }[kind]()
+
+    m1 = build_map(tree, mk(kinds[0], seed + 1), cfg)
+    m2 = build_map(tree, mk(kinds[1], seed + 2), cfg)
+
+    def codes(view):
+        return [
+            np.asarray(g)
+            for xw in jax.tree_util.tree_leaves(
+                view, is_leaf=lambda n: isinstance(n, rram.CrossbarWeight)
+            )
+            for g in (xw.g_pos, xw.g_neg)
+        ]
+
+    ab = codes(apply_fault_map(tree, m1.compose(m2), cfg))
+    ba = codes(apply_fault_map(tree, m2.compose(m1), cfg))
+    for x, y in zip(ab, ba):
+        np.testing.assert_array_equal(x, y)  # commutative
+
+    once = codes(apply_fault_map(tree, m1, cfg))
+    twice = codes(apply_fault_map(tree, m1.compose(m1), cfg))
+    for x, y in zip(once, twice):
+        np.testing.assert_array_equal(x, y)  # idempotent join
+
+    if all(kd in ("stuck_at", "saturated") for kd in kinds):
+        # pin/clamp classes are idempotent under literal re-APPLICATION
+        # too (retention/iv re-bend the already-bent codes, which is why
+        # views always derive from pristine codes, never from views)
+        m = m1.compose(m2)
+        v1 = apply_fault_map(tree, m, cfg)
+        for x, y in zip(codes(apply_fault_map(v1, m, cfg)), codes(v1)):
+            np.testing.assert_array_equal(x, y)
