@@ -1,0 +1,172 @@
+"""Calibration registry bench: steps-to-converge economics of fleet
+warm-start (the ISSUE 8 measurable claim).
+
+Two identical fleets live through the same maintenance timeline — age,
+recalibrate, age again, recalibrate — with every recalibration paying
+from freshly reset (output-preserving) adapters, the way a new
+maintenance process would:
+
+  * COLD arm: every recalibration starts from zeros.
+  * REGISTRY arm: recalibrations record into a ``CalibrationRegistry``
+    and warm-start adapters + optimizer from each chip's nearest stable
+    reference before training.
+
+The convergence target is the cold arm's own achieved loss: a first
+pass runs the cold arm to its full step budget and takes each cycle's
+final max-chip loss as that cycle's target; the measured pass then runs
+BOTH arms with ``loss_threshold`` early-stopping at those targets. The
+fleet lifecycle is deterministic, so the cold arm replays its first
+pass exactly and spends the full budget, while the registry arm stops
+as soon as its warm-started chips are at or below the loss the cold arm
+only reaches at the end. The bench gates on the registry arm spending
+strictly fewer total chip-epochs AND its final loss staying within
+tolerance of the cold arm's. Cycle 1 is identical by construction — the
+registry is empty — so all savings are earned on later cycles.
+
+Usage:
+    PYTHONPATH=src python benchmarks/registry_bench.py --smoke \
+        [--out BENCH_registry.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+
+def run_arm(
+    arch: str, backend: str, *, chips: int, cycles: int, steps: int,
+    samples: int, seq_len: int, hours: float,
+    thresholds: Optional[List[float]], registry_root: Optional[str],
+) -> dict:
+    from repro.configs import get_arch
+    from repro.fleet import Fleet
+    from repro.registry import CalibrationRegistry
+
+    cfg = get_arch(arch).smoke
+    fleet = Fleet.program(cfg, 0, n_chips=chips, backend=backend)
+    registry = (
+        CalibrationRegistry(registry_root) if registry_root else None
+    )
+    reg_args = (
+        {"registry": registry, "warm_start": True} if registry else {}
+    )
+    chip_epochs = 0
+    warm_chips = 0
+    losses = []
+    for c in range(cycles):
+        fleet.advance(hours)
+        # every cycle models a fresh maintenance process: without the
+        # registry the adapters start over from zeros
+        fleet.reset_adapters()
+        rep = fleet.calibrate(
+            samples, steps=steps, seq_len=seq_len,
+            loss_threshold=thresholds[c] if thresholds else 0.0,
+            **reg_args,
+        )
+        chip_epochs += rep.epochs_run * chips
+        warm_chips += len(rep.warm_started_chips)
+        losses.append([float(x) for x in np.asarray(rep.losses)[-1]])
+    return {
+        "chip_epochs": chip_epochs,
+        "chip_epoch_budget": steps * chips * cycles,
+        "warm_started_chips": warm_chips,
+        "final_loss_per_chip": losses[-1],
+        "final_loss_max": max(losses[-1]),
+        "per_cycle_final_loss": losses,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet, short timeline (CI lane; still "
+                         "fails when warm-start saves zero epochs)")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--backend", default="dequant")
+    ap.add_argument("--chips", type=int, default=None)
+    ap.add_argument("--cycles", type=int, default=None,
+                    help="maintenance cycles (default: 3 smoke / 4 full)")
+    ap.add_argument("--loss-tolerance", type=float, default=0.05,
+                    help="registry arm's final max loss may exceed the "
+                         "cold arm's by at most this relative margin")
+    ap.add_argument("--out", default="BENCH_registry.json")
+    args = ap.parse_args()
+
+    chips = args.chips or (3 if args.smoke else 8)
+    cycles = args.cycles or (3 if args.smoke else 4)
+    steps = 8 if args.smoke else 16
+    samples = 4 if args.smoke else 8
+    seq_len = 16 if args.smoke else 32
+
+    common = dict(
+        chips=chips, cycles=cycles, steps=steps, samples=samples,
+        seq_len=seq_len, hours=24.0,
+    )
+    # pass 1: the cold arm's full-budget run defines each cycle's
+    # convergence target (its own final max-chip loss, + float slack)
+    probe = run_arm(
+        args.arch, args.backend, thresholds=None, registry_root=None,
+        **common,
+    )
+    targets = [
+        max(cycle) * (1.0 + 1e-6) for cycle in probe["per_cycle_final_loss"]
+    ]
+    # pass 2: both arms run to the same targets; the cold arm replays
+    # its probe deterministically
+    cold = run_arm(
+        args.arch, args.backend, thresholds=targets, registry_root=None,
+        **common,
+    )
+    with tempfile.TemporaryDirectory() as root:
+        warm = run_arm(
+            args.arch, args.backend, thresholds=targets,
+            registry_root=root, **common,
+        )
+
+    saved = cold["chip_epochs"] - warm["chip_epochs"]
+    result = {
+        "bench": "registry_warmstart",
+        "arch": args.arch,
+        "backend": args.backend,
+        "mode": "smoke" if args.smoke else "full",
+        "chips": chips,
+        "cycles": cycles,
+        "steps_per_cycle": steps,
+        "loss_targets": [round(t, 6) for t in targets],
+        "cold": cold,
+        "registry": warm,
+        "chip_epochs_saved": saved,
+        "chip_epochs_saved_pct": round(
+            100.0 * saved / max(cold["chip_epochs"], 1), 2
+        ),
+    }
+    violations = []
+    if saved <= 0:
+        violations.append(
+            f"warm-start saved {saved} chip-epochs (must be > 0)"
+        )
+    limit = cold["final_loss_max"] * (1.0 + args.loss_tolerance)
+    if warm["final_loss_max"] > limit:
+        violations.append(
+            f"registry final loss {warm['final_loss_max']:.6f} exceeds "
+            f"cold {cold['final_loss_max']:.6f} by more than "
+            f"{100 * args.loss_tolerance:.0f}%"
+        )
+    if warm["warm_started_chips"] == 0:
+        violations.append("no chip ever warm-started")
+    if violations:
+        result["violations"] = violations
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(json.dumps(result, indent=2, sort_keys=True))
+    if violations:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,20 @@ def _flatten_with_names(tree: Pytree) -> Tuple[List[Tuple[str, np.ndarray]], Any
     return named, treedef
 
 
+def as_manager(directory_or_manager, *, keep: int = 3) -> "CheckpointManager":
+    """Coerce a path-or-manager argument to a ``CheckpointManager``.
+
+    Every persistence entry point (``Deployment.snapshot/restore``,
+    ``Fleet.snapshot/restore``, the calibration registry's artifact
+    store) accepts either an existing manager or a directory; this is
+    the one place that coercion lives. ``keep`` only applies when a new
+    manager is constructed — an existing manager keeps its own policy.
+    """
+    if isinstance(directory_or_manager, CheckpointManager):
+        return directory_or_manager
+    return CheckpointManager(str(directory_or_manager), keep=keep)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3):
         self.directory = directory

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import substrate
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import as_manager
 from repro.core import calibrate as C
 from repro.core import rram
 from repro.core.calibrate import (
@@ -246,6 +246,10 @@ class FleetCalibrationReport:
     adapter_params: int          # per-chip adapter params
     calibrated_fraction: float
     backend: str
+    # registry warm-start accounting: which of ``chips`` were seeded
+    # from a stable reference (parallel ``warm_sources`` names them)
+    warm_started_chips: List[int] = dataclasses.field(default_factory=list)
+    warm_sources: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def initial_loss(self) -> np.ndarray:
@@ -480,6 +484,8 @@ class Fleet:
         self, batch_or_samples: Union[Dict, int] = 10, *,
         steps: int = 20, lr: float = 1e-3, opt: Optional[AdamW] = None,
         seq_len: int = 32, chips=None, cached_teacher: Optional[bool] = None,
+        loss_threshold: float = 0.0, registry=None,
+        warm_start: bool = False, record: bool = True,
     ) -> FleetCalibrationReport:
         """Algorithm 1 for ``chips`` (default: all) as ONE vmapped loop:
         the frozen teacher's features are computed once and shared by
@@ -487,7 +493,18 @@ class Fleet:
         each jitted step advances all selected chips' adapters together.
         Chip ``i``'s losses/adapters/optimizer are bitwise what an
         independent ``Deployment.calibrate`` with the same key and
-        default arguments would produce."""
+        default arguments would produce.
+
+        ``loss_threshold`` stops the shared loop early once EVERY
+        selected chip's per-step loss is at or below it (the loop is one
+        vmapped dispatch, so epochs are spent fleet-wide).
+
+        Registry threading (``repro.registry``): ``warm_start=True``
+        seeds all selected chips from their per-chip nearest stable
+        references in one batched scatter before the loop
+        (``registry/warmstart.seed_fleet``); ``record=True`` persists
+        each chip's result as a versioned artifact under its own
+        ``(cfg, backend, drift signature)`` key afterwards."""
         cfg = self.cfg
         opt = opt if opt is not None else AdamW(lr=lr)
         chips = self._chip_list(chips)
@@ -499,6 +516,11 @@ class Fleet:
         )
         if self.opt_state is None:
             self.opt_state = jax.vmap(adamw_init)(self.adapters)
+        warm_recs = [None] * len(chips)
+        if registry is not None and warm_start:
+            from repro.registry.warmstart import seed_fleet
+
+            warm_recs = seed_fleet(self, registry, chips)
         state = CalibState(
             self.teacher_base,
             _take(self.base, idx),
@@ -523,6 +545,10 @@ class Fleet:
             for _ in range(steps):
                 state, metrics = run(state)
                 losses.append(np.asarray(metrics["loss"], np.float32))
+                if loss_threshold and bool(
+                    np.all(losses[-1] <= loss_threshold)
+                ):
+                    break
         self.adapters = jax.tree_util.tree_map(
             lambda full, sub: full.at[idx].set(sub),
             self.adapters, state.adapters,
@@ -544,7 +570,7 @@ class Fleet:
              "adapters": jax.tree_util.tree_map(lambda x: x[0], self.adapters)}
         )
         total_sram = sram_bytes(self.adapters)
-        return FleetCalibrationReport(
+        report = FleetCalibrationReport(
             chips=chips,
             losses=np.stack(losses),
             epochs_run=len(losses),
@@ -555,7 +581,79 @@ class Fleet:
             adapter_params=n_adapters,
             calibrated_fraction=n_adapters / max(n_base, 1),
             backend=self.backend,
+            warm_started_chips=[
+                c for c, r in zip(chips, warm_recs) if r is not None
+            ],
+            warm_sources=[
+                r.name for r in warm_recs if r is not None
+            ],
         )
+        if registry is not None and record:
+            self._record_artifacts(registry, report, warm_recs)
+        return report
+
+    def _record_artifacts(self, registry, report, warm_recs) -> None:
+        """Persist each calibrated chip's run as its own versioned
+        artifact (its drift signature differs per chip, so each files
+        under — and is stability-checked against — its own key)."""
+        from repro.deploy.deployment import CalibrationReport
+
+        for j, c in enumerate(report.chips):
+            rec = warm_recs[j] if j < len(warm_recs) else None
+            chip_report = CalibrationReport(
+                losses=[float(x) for x in report.losses[:, j]],
+                epochs_run=report.epochs_run,
+                sram_bytes=report.sram_bytes_per_chip,
+                rram_bytes=report.rram_bytes // self.n_chips,
+                base_params=report.base_params,
+                adapter_params=report.adapter_params,
+                calibrated_fraction=report.calibrated_fraction,
+                backend=report.backend,
+                drift_events=len(self.drift_hours[c]),
+                warm_started=rec is not None,
+                warm_source=None if rec is None else rec.name,
+            )
+            registry.record(
+                self.cfg, self.backend, self.chip_signature(c),
+                adapters=jax.tree_util.tree_map(
+                    lambda x: x[c], self.adapters
+                ),
+                opt_state=jax.tree_util.tree_map(
+                    lambda x: x[c], self.opt_state
+                ),
+                report=chip_report,
+                extra_meta={"chip": int(c)},
+            )
+
+    def chip_signature(self, i: int) -> np.ndarray:
+        """Chip ``i``'s registry signature (device feature from its
+        per-chip programming key + its own drift/fault state) — what its
+        calibration artifacts file under and warm-start lookups rank
+        against."""
+        from repro.registry.warmstart import drift_signature
+
+        i = int(i)
+        return drift_signature(
+            self.cfg.rram, self.chip_key(i),
+            field_hours=self.field_hours(i),
+            drift_events=len(self.drift_hours[i]),
+            fault_events=sum(
+                1 for _, chips in self.fault_events if i in chips
+            ),
+        )
+
+    def reset_adapters(self) -> "Fleet":
+        """Discard every chip's SRAM side-cars back to the fresh
+        (output-preserving) teacher init and clear the optimizer — the
+        "calibrate from scratch" state a new process starts from. The
+        stacked codes and per-chip drift clocks are untouched."""
+        fresh = T.init_params(self.teacher_key, self.cfg)["adapters"]
+        self.adapters = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * self.n_chips), fresh
+        )
+        self.opt_state = None
+        self.steps = [0] * self.n_chips
+        return self
 
     # -- drift proxy ---------------------------------------------------------
 
@@ -680,11 +778,7 @@ class Fleet:
         histories, step counters) and the drift-proxy baselines. The
         stacked base is NOT stored — restore replays programming and
         every per-chip drift tick."""
-        manager = (
-            directory_or_manager
-            if isinstance(directory_or_manager, CheckpointManager)
-            else CheckpointManager(str(directory_or_manager))
-        )
+        manager = as_manager(directory_or_manager)
         if self.opt_state is None:
             self.opt_state = jax.vmap(adamw_init)(self.adapters)
         # a key that grows with ANY state change (calibration steps OR
@@ -734,7 +828,7 @@ class Fleet:
         independence makes cross-chip order irrelevant), then load the
         stacked adapters/optimizer and proxy baselines. Bitwise equal to
         the snapshotted fleet."""
-        manager = CheckpointManager(str(directory))
+        manager = as_manager(directory)
         if step is None:
             step = manager.latest_step()
         if step is None:

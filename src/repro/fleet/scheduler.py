@@ -85,6 +85,16 @@ class FleetReport:
     )
     hard_faulted_chips: List[int] = dataclasses.field(default_factory=list)
     per_chip_hard_proxy: List[float] = dataclasses.field(default_factory=list)
+    # registry warm-start accounting (steps-to-converge economics): a
+    # chip-epoch is one chip trained for one epoch; the budget is what
+    # running every triggered recalibration to its full configured step
+    # count would have spent, so ``calibration_epochs_saved`` is the
+    # concrete convergence saving the warm-started references bought
+    # (0 without a registry or a ``loss_threshold`` to converge against).
+    warm_started_recalibrations: int = 0
+    calibration_chip_epochs: int = 0
+    calibration_chip_epoch_budget: int = 0
+    calibration_epochs_saved: int = 0
 
     def summary(self) -> str:
         avoided_pct = (
@@ -136,6 +146,7 @@ class RecalibrationScheduler:
         calib_args: Optional[Dict[str, Any]] = None,
         hard_threshold: Optional[float] = None,
         hard_calib_args: Optional[Dict[str, Any]] = None,
+        registry=None, warm_start: bool = True,
     ):
         if threshold <= 0:
             raise ValueError(f"threshold must be > 0, got {threshold}")
@@ -157,11 +168,18 @@ class RecalibrationScheduler:
                 self.calib_args.get("steps", 20)
             )
         self.hard_calib_args = dict(hard_calib_args)
+        # registry: both recalibration paths warm-start from (and record
+        # back into) the versioned calibration registry when one is given
+        self.registry = registry
+        self.warm_start = bool(warm_start) and registry is not None
         self.history: List[TickRecord] = []
         self._last_loss = np.full(fleet.n_chips, np.nan, np.float64)
         self._per_chip_recals = [0] * fleet.n_chips
         self._per_chip_hard_recals = [0] * fleet.n_chips
         self._hard_flagged: set = set()
+        self._warm_recals = 0
+        self._chip_epochs = 0
+        self._chip_epoch_budget = 0
 
     @property
     def ticks(self) -> int:
@@ -208,19 +226,29 @@ class RecalibrationScheduler:
             int(c) for c in np.flatnonzero(proxy > self.threshold)
             if int(c) not in hard_due
         ]
+        registry_args = (
+            {"registry": self.registry, "warm_start": self.warm_start}
+            if self.registry is not None else {}
+        )
         report = None
         if due:
-            report = fleet.calibrate(chips=due, **self.calib_args)
+            report = fleet.calibrate(
+                chips=due, **self.calib_args, **registry_args
+            )
             for j, c in enumerate(due):
                 self._per_chip_recals[c] += 1
                 self._last_loss[c] = float(report.final_loss[j])
+            self._account_epochs(report, self.calib_args)
         hard_report = None
         if hard_due:
-            hard_report = fleet.calibrate(chips=hard_due, **self.hard_calib_args)
+            hard_report = fleet.calibrate(
+                chips=hard_due, **self.hard_calib_args, **registry_args
+            )
             for j, c in enumerate(hard_due):
                 self._per_chip_hard_recals[c] += 1
                 self._last_loss[c] = float(hard_report.final_loss[j])
                 self._hard_flagged.add(c)
+            self._account_epochs(hard_report, self.hard_calib_args)
         record = TickRecord(
             tick=len(self.history), hours=per_chip_hours,
             proxy=proxy, recalibrated=due, report=report,
@@ -229,6 +257,16 @@ class RecalibrationScheduler:
         )
         self.history.append(record)
         return record
+
+    def _account_epochs(self, report, args: Dict[str, Any]) -> None:
+        """Steps-to-converge accounting for one batched calibrate call:
+        actual chip-epochs spent vs the full configured step budget (the
+        two differ when ``loss_threshold`` stops a warm-started loop
+        early)."""
+        n = len(report.chips)
+        self._chip_epochs += report.epochs_run * n
+        self._chip_epoch_budget += int(args.get("steps", 20)) * n
+        self._warm_recals += len(report.warm_started_chips)
 
     def run(
         self, schedule: Sequence[Union[float, Sequence[float]]],
@@ -286,4 +324,10 @@ class RecalibrationScheduler:
             per_chip_hard_recalibrations=list(self._per_chip_hard_recals),
             hard_faulted_chips=sorted(self._hard_flagged),
             per_chip_hard_proxy=hard_proxy,
+            warm_started_recalibrations=self._warm_recals,
+            calibration_chip_epochs=self._chip_epochs,
+            calibration_chip_epoch_budget=self._chip_epoch_budget,
+            calibration_epochs_saved=(
+                self._chip_epoch_budget - self._chip_epochs
+            ),
         )

@@ -1,0 +1,46 @@
+"""Versioned calibration registry: stability metrics, reference
+promotion, and fleet-wide DoRA warm-start.
+
+Every ``Deployment.calibrate`` / ``Fleet.calibrate`` run can be
+persisted as a versioned, content-addressed artifact keyed by ``(cfg
+fingerprint, backend, drift/fault signature)``; stability metrics
+(percentile drift, JSD, ``is_stable``) decide when a key's promoted
+reference is replaced; and new or recalibrating chips warm-start their
+adapters + optimizer from the nearest stable reference instead of from
+zeros — turning one-off calibrations into a fleet-wide amortized asset:
+
+    from repro.registry import CalibrationRegistry
+
+    registry = CalibrationRegistry("/var/cal-registry")
+    dep.calibrate(10, registry=registry)                  # record v1
+    dep.advance(hours=168)
+    dep.calibrate(10, registry=registry, warm_start=True)  # seeded, fast
+
+See ``registry/store.py`` for the artifact layout, ``registry/metrics``
+for the drift metrics, ``registry/policy`` for promotion rules, and
+``registry/warmstart`` for the nearest-reference lookup.
+"""
+from repro.registry.metrics import (  # noqa: F401
+    DEFAULT_THRESHOLDS,
+    StabilityMetrics,
+    StabilityThresholds,
+    adapter_samples,
+    is_stable_under,
+    jensen_shannon,
+    stability_metrics,
+)
+from repro.registry.policy import PromotionDecision, PromotionPolicy  # noqa: F401
+from repro.registry.store import (  # noqa: F401
+    ArtifactRecord,
+    CalibrationRegistry,
+    RegistryKey,
+    cfg_fingerprint,
+    signature_key,
+)
+from repro.registry.warmstart import (  # noqa: F401
+    drift_signature,
+    nearest_reference,
+    seed_deployment,
+    seed_fleet,
+    signature_distance,
+)

@@ -1,0 +1,56 @@
+"""Reference-promotion rules for the calibration registry.
+
+Every recorded calibration becomes a new immutable VERSION under its
+``(cfg fingerprint, backend, drift signature)`` key; at most one version
+per key is the promoted REFERENCE — the artifact warm-starts seed from
+and fresh runs are drift-checked against. The nomarr rule set:
+
+* **first run always promotes** — a key with no reference has nothing to
+  compare against, and an unreferenced key is useless to warm-start
+  from;
+* **later runs promote only on instability** — if the fresh run's
+  distribution still matches the reference (``metrics.is_stable``), the
+  reference is still representative and churn is pure noise: keep it.
+  When the fresh run has drifted away (``is_stable == False``), the
+  reference is stale — promote the fresh version.
+
+Promotion is decided here and APPLIED atomically by the store
+(tmp-write + ``os.replace`` of the reference pointer), so readers never
+observe a half-promoted key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.registry.metrics import StabilityMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class PromotionDecision:
+    promote: bool
+    reason: str
+
+
+class PromotionPolicy:
+    """Default promote-on-instability policy (see module docstring).
+
+    Subclass and override ``decide`` for alternative economies (e.g.
+    always-promote for a registry used as a rolling cache, or
+    never-promote for a frozen production registry)."""
+
+    def decide(
+        self, *, has_reference: bool, metrics: Optional[StabilityMetrics],
+    ) -> PromotionDecision:
+        if not has_reference:
+            return PromotionDecision(True, "first run for key")
+        if metrics is None:
+            # reference exists but could not be compared (e.g. its sample
+            # sidecar was lost) — re-promote so the key heals itself
+            return PromotionDecision(True, "reference unreadable")
+        if metrics.is_stable:
+            return PromotionDecision(False, "reference stable")
+        drifted = ", ".join(
+            f"{k}={v:.4f}" for k, v in sorted(metrics.drifts().items())
+        )
+        return PromotionDecision(True, f"reference unstable ({drifted})")

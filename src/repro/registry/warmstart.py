@@ -1,0 +1,195 @@
+"""Nearest-stable-reference warm-start for DoRA calibration.
+
+The paper's calibration cost (10 samples x ~20 epochs) is paid from
+zero-initialized (output-preserving) adapters on every recalibration.
+But drift compensation transfers across nearby drift states when
+factored correctly (VeRA+, arxiv 2603.26016): a chip recalibrating after
+one more drift epoch starts from an optimum a small perturbation away
+from its LAST one, and a freshly joined chip starts closer to a sibling
+chip's compensation than to zero. This module turns the registry's
+promoted references into those starting points:
+
+* ``drift_signature`` — a small float vector summarizing a device's
+  drift/fault state: a DEVICE feature (hash of the programming key,
+  scaled by ``DEVICE_WEIGHT``) plus the physical drift scale
+  (``rram.drift_sigma`` over the elapsed field hours), a log-time
+  feature, the drift-event count, and the fault-event count. The device
+  feature dominates cross-device distances, so a chip's OWN history wins
+  the lookup whenever it exists; a virgin chip (no own artifacts) falls
+  back to the nearest sibling reference deterministically.
+* ``nearest_reference`` — Euclidean nearest promoted reference among
+  all keys under ``(cfg, backend)``; ties break on the lexicographic
+  signature key, so the lookup is a pure function of the registry
+  contents.
+* ``seed_deployment`` / ``seed_fleet`` — seed ``CalibState`` adapters
+  AND optimizer moments from the reference instead of zeros; the fleet
+  form resolves per-chip nearest references and scatters them into the
+  stacked trees in one batched seed (one ``.at[idx].set`` per leaf).
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import rram
+from repro.registry.store import ArtifactRecord, CalibrationRegistry
+
+Pytree = Any
+
+# Scale of the device-identity component relative to the drift-state
+# components. Per-cycle drift-state distances are O(relative_drift *
+# log-time increment) ~ 1e-2; two distinct devices differ by up to
+# DEVICE_WEIGHT here, so own-history references dominate whenever they
+# exist without drowning the drift components for virgin chips.
+DEVICE_WEIGHT = 0.25
+
+# Normalizers keeping the time/event components commensurate with the
+# sigma component (~1e-1 over realistic lifetimes).
+_LOG_TIME_SCALE = 1.0 / 16.0
+_EVENT_SCALE = 1.0 / 32.0
+
+
+def device_feature(program_key) -> float:
+    """Deterministic device-identity feature in ``[0, DEVICE_WEIGHT)``:
+    a crc32 of the programming key words. Not a metric — an identity
+    separator that keeps different devices' signatures apart."""
+    words = np.asarray(program_key).astype(np.uint32)
+    return DEVICE_WEIGHT * (zlib.crc32(words.tobytes()) / 2.0 ** 32)
+
+
+def drift_signature(
+    rcfg: rram.RramConfig,
+    program_key,
+    *,
+    field_hours: float,
+    drift_events: int,
+    fault_events: int = 0,
+) -> np.ndarray:
+    """The registry signature of one device's drift/fault state. Two
+    identical lifecycles (same programming key, same history) produce the
+    same vector — and hence the same registry key — while nearby drift
+    states land nearby in Euclidean distance. Fault events weigh 1.0
+    each: a faulted chip's compensation should never silently seed a
+    healthy one."""
+    return np.asarray(
+        [
+            device_feature(program_key),
+            rram.drift_sigma(rcfg, float(field_hours)),
+            np.log1p(float(field_hours)) * _LOG_TIME_SCALE,
+            float(drift_events) * _EVENT_SCALE,
+            float(fault_events),
+        ],
+        np.float64,
+    )
+
+
+def signature_distance(a, b) -> float:
+    """Euclidean distance between two signature vectors."""
+    a = np.asarray(a, np.float64).ravel()
+    b = np.asarray(b, np.float64).ravel()
+    if a.shape != b.shape:
+        return float("inf")
+    return float(np.sqrt(np.sum((a - b) ** 2)))
+
+
+def nearest_reference(
+    registry: CalibrationRegistry, cfg, backend: str, signature,
+) -> Optional[ArtifactRecord]:
+    """The promoted reference nearest to ``signature`` among every key
+    under ``(cfg, backend)``. Deterministic: candidates are ranked by
+    ``(distance, signature key)`` — repeated lookups against unchanged
+    registry contents always return the same record."""
+    refs = registry.references(cfg, backend)
+    if not refs:
+        return None
+    ranked = sorted(
+        refs,
+        key=lambda r: (signature_distance(signature, r.signature),
+                       r.key.sig_key),
+    )
+    best = ranked[0]
+    if signature_distance(signature, best.signature) == float("inf"):
+        return None
+    return best
+
+
+def seed_deployment(dep, registry: CalibrationRegistry) -> Optional[ArtifactRecord]:
+    """Warm-start one deployment: find the nearest stable reference for
+    its current drift signature and seed its adapters + optimizer from
+    the recorded artifact (bitwise as recorded). Returns the record, or
+    None when the registry has nothing usable (the caller falls back to
+    the cold zero-initialized start)."""
+    from repro.optim.adam import adamw_init
+
+    rec = nearest_reference(
+        registry, dep.cfg, dep.backend, dep.drift_signature()
+    )
+    if rec is None:
+        return None
+    like = {
+        "adapters": dep.adapters,
+        "opt": dep.opt_state if dep.opt_state is not None
+        else adamw_init(dep.adapters),
+    }
+    trees = registry.load(rec, like)
+    dep.adapters = trees["adapters"]
+    dep.opt_state = trees["opt"]
+    return rec
+
+
+def seed_fleet(
+    fleet, registry: CalibrationRegistry, chips: Sequence[int],
+) -> List[Optional[ArtifactRecord]]:
+    """Warm-start ``chips`` of a fleet in ONE batched seed: resolve each
+    chip's nearest stable reference (per-chip drift signatures), load
+    every distinct artifact once, stack the per-chip reference trees, and
+    scatter them into the fleet's stacked adapters/optimizer with a
+    single ``.at[idx].set`` per leaf. Chips without a usable reference
+    keep their current (cold) state. Returns the per-chip records
+    (None: cold)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.optim.adam import adamw_init
+
+    recs: List[Optional[ArtifactRecord]] = [
+        nearest_reference(
+            registry, fleet.cfg, fleet.backend, fleet.chip_signature(c)
+        )
+        for c in chips
+    ]
+    hits = [(c, r) for c, r in zip(chips, recs) if r is not None]
+    if not hits:
+        return recs
+    if fleet.opt_state is None:
+        fleet.opt_state = jax.vmap(adamw_init)(fleet.adapters)
+    like = {
+        "adapters": jax.tree_util.tree_map(lambda x: x[0], fleet.adapters),
+        "opt": jax.tree_util.tree_map(lambda x: x[0], fleet.opt_state),
+    }
+    cache = {}
+    loaded = []
+    for _, rec in hits:
+        k = (rec.key.name, rec.version)
+        if k not in cache:
+            cache[k] = registry.load(rec, like)
+        loaded.append(cache[k])
+    idx = jnp.asarray([c for c, _ in hits], jnp.int32)
+    stacked = {
+        name: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+            *[t[name] for t in loaded],
+        )
+        for name in ("adapters", "opt")
+    }
+    fleet.adapters = jax.tree_util.tree_map(
+        lambda full, sub: full.at[idx].set(sub),
+        fleet.adapters, stacked["adapters"],
+    )
+    fleet.opt_state = jax.tree_util.tree_map(
+        lambda full, sub: full.at[idx].set(sub),
+        fleet.opt_state, stacked["opt"],
+    )
+    return recs

@@ -191,3 +191,70 @@ def test_fault_map_composition_order_independent_and_idempotent(
         v1 = apply_fault_map(tree, m, cfg)
         for x, y in zip(codes(apply_fault_map(v1, m, cfg)), codes(v1)):
             np.testing.assert_array_equal(x, y)
+
+
+# -- calibration registry stability metrics (ISSUE 8) ------------------------
+
+
+_samples = st.lists(
+    st.floats(-100.0, 100.0, allow_nan=False), min_size=8, max_size=256
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=_samples, b=_samples)
+def test_jsd_symmetric_and_bounded(a, b):
+    from repro.registry import jensen_shannon
+
+    a, b = np.asarray(a), np.asarray(b)
+    ab = jensen_shannon(a, b)
+    ba = jensen_shannon(b, a)
+    assert ab == pytest.approx(ba, abs=1e-12)  # symmetric
+    assert 0.0 <= ab <= 1.0 + 1e-12            # base-2: bounded
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=_samples)
+def test_jsd_zero_on_identical(a):
+    from repro.registry import jensen_shannon
+
+    a = np.asarray(a)
+    assert jensen_shannon(a, a) == pytest.approx(0.0, abs=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=_samples, b=_samples)
+def test_percentile_drift_nonnegative_zero_on_self(a, b):
+    from repro.registry import stability_metrics
+
+    a, b = np.asarray(a), np.asarray(b)
+    m = stability_metrics(a, b)
+    for v in m.drifts().values():
+        assert v >= 0.0
+    on_self = stability_metrics(a, a)
+    for name, v in on_self.drifts().items():
+        assert v == pytest.approx(0.0, abs=1e-9), name
+    assert on_self.is_stable
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    a=_samples, b=_samples,
+    t=st.floats(1e-6, 1.0), bumps=st.lists(
+        st.floats(0.0, 1.0), min_size=5, max_size=5
+    ),
+)
+def test_is_stable_monotone_in_thresholds(a, b, t, bumps):
+    """Loosening any threshold never flips stable -> unstable."""
+    from repro.registry import (
+        StabilityThresholds, is_stable_under, stability_metrics,
+    )
+
+    m = stability_metrics(np.asarray(a), np.asarray(b))
+    lo = StabilityThresholds(apd=t, srd=t, jsd=t, median=t, iqr=t)
+    hi = StabilityThresholds(
+        apd=t + bumps[0], srd=t + bumps[1], jsd=t + bumps[2],
+        median=t + bumps[3], iqr=t + bumps[4],
+    )
+    if is_stable_under(m, lo):
+        assert is_stable_under(m, hi)

@@ -1,0 +1,305 @@
+"""Calibration registry: artifact round-trip and version monotonicity,
+promotion only when the reference has gone unstable, deterministic
+nearest-reference lookup, and fleet warm-start parity (a warm-started
+chip's loss is no worse than a cold-started one after equal steps)
+(ISSUE 8 acceptance)."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import CheckpointManager, as_manager
+from repro.configs import get_arch
+from repro.deploy import Deployment
+from repro.deploy.deployment import CalibrationReport
+from repro.fleet import Fleet, RecalibrationScheduler
+from repro.registry import (
+    DEFAULT_THRESHOLDS,
+    CalibrationRegistry,
+    PromotionPolicy,
+    StabilityThresholds,
+    drift_signature,
+    nearest_reference,
+    signature_key,
+    stability_metrics,
+)
+
+
+def _cfg():
+    return get_arch("qwen3_1_7b").smoke
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb) and len(la) > 0
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.fixture(scope="module")
+def calibrated(tmp_path_factory):
+    """One deployment calibrated twice through a registry (24h then 48h
+    of drift), shared by the read-only assertions below."""
+    root = tmp_path_factory.mktemp("registry")
+    reg = CalibrationRegistry(str(root))
+    dep = Deployment.program(_cfg(), 0)
+    dep.advance(24.0)
+    r1 = dep.calibrate(4, steps=4, seq_len=16, registry=reg)
+    dep.advance(24.0)
+    r2 = dep.calibrate(4, steps=4, seq_len=16, registry=reg)
+    return reg, dep, r1, r2
+
+
+# -- artifact round-trip and version monotonicity ----------------------------
+
+
+def test_artifact_roundtrip_bitwise(calibrated):
+    reg, dep, _, _ = calibrated
+    key = reg.key_for(dep.cfg, dep.backend, dep.drift_signature())
+    versions = reg.versions(key)
+    assert versions, "second calibrate must have recorded an artifact"
+    rec = reg.artifact(key, versions[-1])
+    like = {"adapters": dep.adapters, "opt": dep.opt_state}
+    trees = reg.load(rec, like)
+    _leaves_equal(trees["adapters"], dep.adapters)
+    _leaves_equal(trees["opt"], dep.opt_state)
+
+
+def test_versions_monotone_per_key(calibrated):
+    reg, dep, _, _ = calibrated
+    # same key twice -> versions 1, 2; distinct keys each start at 1.
+    sig = dep.drift_signature()
+    key = reg.key_for(dep.cfg, dep.backend, sig)
+    dep2 = Deployment.program(_cfg(), 0)
+    dep2.advance(24.0)
+    dep2.advance(24.0)
+    r = dep2.calibrate(4, steps=2, seq_len=16, registry=reg)
+    assert reg.versions(key) == [1, 2]
+    for k in (key, reg.key_for(dep.cfg, dep.backend, sig)):
+        assert k.name == key.name  # key derivation is deterministic
+    assert r.losses  # the extra run recorded v2 for the same signature
+
+
+def test_sidecar_metadata(calibrated):
+    reg, dep, _, r2 = calibrated
+    key = reg.key_for(dep.cfg, dep.backend, dep.drift_signature())
+    rec = reg.artifact(key, 1)  # v1 of the 48h key is the fixture's r2
+    assert rec.meta["backend"] == dep.backend
+    assert rec.meta["report"]["final_loss"] == pytest.approx(r2.final_loss)
+    assert "metrics" in rec.meta and "promotion" in rec.meta
+    # artifact exists iff its sidecar exists: samples ride along
+    assert reg.samples(rec) is not None
+
+
+# -- promotion policy --------------------------------------------------------
+
+
+def test_first_run_always_promotes(calibrated):
+    reg, dep, _, _ = calibrated
+    # dep's FIRST calibrate used the 24h signature -> that key's v1 must
+    # be the promoted reference (first run for a key always promotes).
+    sig1 = drift_signature(
+        dep.cfg.rram, dep.program_key, field_hours=24.0, drift_events=1
+    )
+    key1 = reg.key_for(dep.cfg, dep.backend, sig1)
+    ref = reg.reference(key1)
+    assert ref is not None and ref.version == 1 and ref.promoted
+
+
+def test_promotes_only_when_unstable(tmp_path):
+    # Thresholds at infinity: everything is stable, so v2 for the same
+    # key must NOT displace v1 as the reference. Thresholds at zero:
+    # any drift is instability, so v2 must take over.
+    cfg = _cfg()
+    for name, thr, want_ref in (
+        ("lenient", StabilityThresholds(1e9, 1e9, 1e9, 1e9, 1e9), 1),
+        ("strict", StabilityThresholds(0.0, 0.0, 0.0, 0.0, 0.0), 2),
+    ):
+        reg = CalibrationRegistry(str(tmp_path / name), thresholds=thr)
+        dep = Deployment.program(cfg, 0)
+        dep.advance(24.0)
+        dep.calibrate(4, steps=2, seq_len=16, registry=reg)
+        dep.calibrate(4, steps=2, seq_len=16, registry=reg)
+        key = reg.key_for(cfg, dep.backend, dep.drift_signature())
+        assert reg.versions(key) == [1, 2]
+        ref = reg.reference(key)
+        assert ref is not None and ref.version == want_ref, name
+
+
+def test_promotion_policy_reasons():
+    policy = PromotionPolicy()
+    assert policy.decide(has_reference=False, metrics=None).promote
+    assert policy.decide(has_reference=True, metrics=None).promote
+    x = np.linspace(-1.0, 1.0, 512)
+    stable = stability_metrics(x, x)
+    assert stable.is_stable
+    assert not policy.decide(has_reference=True, metrics=stable).promote
+    shifted = stability_metrics(x + 0.5, x)
+    assert not shifted.is_stable
+    assert policy.decide(has_reference=True, metrics=shifted).promote
+
+
+# -- nearest-reference lookup ------------------------------------------------
+
+
+def test_nearest_reference_deterministic(calibrated):
+    reg, dep, _, _ = calibrated
+    sig = dep.drift_signature()
+    recs = [
+        nearest_reference(reg, dep.cfg, dep.backend, sig) for _ in range(3)
+    ]
+    assert all(r is not None for r in recs)
+    assert len({(r.key.name, r.version) for r in recs}) == 1
+    # own-history wins: the nearest reference carries dep's own device
+    # feature (the promoted 24h key), not some other chip's.
+    # stored signatures are quantized to 6 decimals
+    assert recs[0].signature[0] == pytest.approx(float(sig[0]), abs=1e-6)
+
+
+def test_nearest_reference_empty(tmp_path):
+    reg = CalibrationRegistry(str(tmp_path))
+    dep = Deployment.program(_cfg(), 0)
+    assert nearest_reference(
+        reg, dep.cfg, dep.backend, dep.drift_signature()
+    ) is None
+    # warm_start=True against an empty registry falls back to cold
+    rep = dep.calibrate(2, steps=1, seq_len=16, warm_start=True,
+                        registry=reg, record=False)
+    assert rep.warm_started is False and rep.warm_source is None
+
+
+def test_signature_key_quantization():
+    a = np.array([0.1, 0.2, 0.3])
+    assert signature_key(a) == signature_key(a + 1e-9)
+    assert signature_key(a) != signature_key(a + 1e-3)
+
+
+# -- warm-start --------------------------------------------------------------
+
+
+def test_deployment_warmstart_lowers_initial_loss(tmp_path):
+    cfg = _cfg()
+    reg = CalibrationRegistry(str(tmp_path))
+    dep = Deployment.program(cfg, 0)
+    dep.advance(24.0)
+    dep.calibrate(4, steps=6, seq_len=16, registry=reg)
+    dep.advance(24.0)
+    dep.reset_adapters()  # model a fresh process: adapters back to zero
+    warm = dep.calibrate(
+        4, steps=3, seq_len=16, registry=reg, warm_start=True
+    )
+    cold_dep = Deployment.program(cfg, 0)
+    cold_dep.advance(24.0)
+    cold_dep.advance(24.0)
+    cold = cold_dep.calibrate(4, steps=3, seq_len=16)
+    assert warm.warm_started and warm.warm_source
+    assert not cold.warm_started
+    assert warm.initial_loss < cold.initial_loss
+    assert warm.final_loss <= cold.final_loss
+
+
+def test_fleet_warmstart_parity(tmp_path):
+    """A warm-started chip's loss is <= the cold-started chip's after
+    the same number of steps (ISSUE 8 acceptance)."""
+    cfg = _cfg()
+    reg = CalibrationRegistry(str(tmp_path))
+    fl = Fleet.program(cfg, 0, n_chips=2)
+    fl.advance(24.0)
+    fl.calibrate(4, steps=6, seq_len=16, registry=reg)
+    fl.advance(24.0)
+    fl.reset_adapters()
+    warm = fl.calibrate(
+        4, steps=3, seq_len=16, registry=reg, warm_start=True
+    )
+    cold_fl = Fleet.program(cfg, 0, n_chips=2)
+    cold_fl.advance(24.0)
+    cold_fl.advance(24.0)
+    cold = cold_fl.calibrate(4, steps=3, seq_len=16)
+    assert warm.warm_started_chips == [0, 1]
+    assert len(warm.warm_sources) == 2
+    warm_final = np.asarray(warm.losses)[-1]
+    cold_final = np.asarray(cold.losses)[-1]
+    assert np.all(warm_final <= cold_final)
+
+
+def test_fleet_virgin_chip_falls_back_to_sibling(tmp_path):
+    """A chip with no history of its own seeds from a sibling's
+    reference rather than starting cold."""
+    cfg = _cfg()
+    reg = CalibrationRegistry(str(tmp_path))
+    fl = Fleet.program(cfg, 0, n_chips=2)
+    fl.advance(24.0)
+    # only chip 0 ever calibrates -> the registry holds chip-0 keys only
+    fl.calibrate(4, steps=4, seq_len=16, chips=[0], registry=reg)
+    fl.advance(24.0)
+    fl.reset_adapters()
+    warm = fl.calibrate(
+        4, steps=1, seq_len=16, chips=[1], registry=reg, warm_start=True
+    )
+    assert warm.warm_started_chips == [1]
+    sig0 = fl.chip_signature(0)
+    assert warm.warm_sources[0].startswith(
+        reg.key_for(cfg, fl.backend, sig0).cfg_fp
+    )
+
+
+def test_fleet_loss_threshold_early_stop(tmp_path):
+    cfg = _cfg()
+    fl = Fleet.program(cfg, 0, n_chips=2)
+    fl.advance(24.0)
+    full = fl.calibrate(4, steps=6, seq_len=16)
+    assert full.epochs_run == 6
+    fl2 = Fleet.program(cfg, 0, n_chips=2)
+    fl2.advance(24.0)
+    thr = float(np.max(np.asarray(full.losses)[0])) + 1.0  # above epoch 1
+    early = fl2.calibrate(4, steps=6, seq_len=16, loss_threshold=thr)
+    assert early.epochs_run < 6
+
+
+def test_scheduler_reports_epoch_savings(tmp_path):
+    cfg = _cfg()
+    reg = CalibrationRegistry(str(tmp_path))
+    fl = Fleet.program(cfg, 0, n_chips=2)
+    sched = RecalibrationScheduler(
+        fl, threshold=1e-4,
+        calib_args=dict(
+            batch_or_samples=4, steps=6, seq_len=16, loss_threshold=0.04
+        ),
+        registry=reg,
+    )
+    rep = sched.run([24.0, 24.0])
+    assert rep.warm_started_recalibrations > 0
+    assert rep.calibration_chip_epoch_budget >= rep.calibration_chip_epochs
+    assert rep.calibration_epochs_saved == (
+        rep.calibration_chip_epoch_budget - rep.calibration_chip_epochs
+    )
+    json.loads(rep.to_json())
+
+
+# -- satellites: report JSON, as_manager -------------------------------------
+
+
+def test_calibration_report_json_roundtrip():
+    rep = CalibrationReport(
+        losses=[0.5, 0.25], epochs_run=2, sram_bytes=64, rram_bytes=256,
+        base_params=1024, adapter_params=24, calibrated_fraction=0.0234,
+        backend="dequant", drift_events=3,
+        warm_started=True, warm_source="abc/dequant/def@v2",
+    )
+    assert rep.initial_loss == pytest.approx(0.5)
+    assert rep.final_loss == pytest.approx(0.25)
+    back = CalibrationReport.from_json(rep.to_json())
+    assert back.to_dict() == rep.to_dict()
+    assert back == rep
+
+
+def test_as_manager_coercion(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    assert as_manager(mgr) is mgr
+    made = as_manager(tmp_path / "sub")
+    assert isinstance(made, CheckpointManager)
+    made.save(1, {"x": np.arange(3)})
+    out = made.restore(1, {"x": np.zeros(3)})
+    np.testing.assert_array_equal(out["x"], np.arange(3))
