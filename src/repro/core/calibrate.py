@@ -423,69 +423,82 @@ def teacher_features(teacher_base, batch, cfg):
     return jnp.stack(feats)  # (L+1, B, S, d)
 
 
-def make_cached_calib_step(cfg, opt: AdamW = AdamW(lr=1e-3)):
-    """Calibration step against cached teacher features: each student
-    block sees feats[l] and matches feats[l+1]. Teacher forward cost: 0."""
+def make_cached_calib_loss(cfg):
+    """The cached-teacher calibration loss as a standalone function
+    ``loss_fn(adapters, student_base, feats, batch)``: each student
+    block sees feats[l] and matches feats[l+1] (per-block MSE, averaged
+    over layers). Shared by the single-chip/vmapped step below and the
+    mesh-parallel fleet path (which needs raw per-chip gradients for the
+    compressed cross-device all-reduce)."""
     from repro.models import transformer as T
     import jax.numpy as jnp
 
-    def step(state: CalibState, feats, batch):
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+
+    def loss_fn(adapters, sbase, feats, batch):
         s = feats.shape[2]
         positions = jnp.arange(s)[None]
-        kinds = cfg.layer_kinds()
-        pro, n_groups, epi = cfg.body_layout()
-        p = cfg.scan_period
-        sbase = state.student_base
+        loss = jnp.zeros((), jnp.float32)
 
-        def loss_fn(adapters):
-            loss = jnp.zeros((), jnp.float32)
+        def pair(l, b, a_, kind):
+            mixer, ffn = kind
+            s_out = T.block_forward(
+                feats[l], b, a_, cfg, mixer, ffn, positions=positions
+            )
+            d = (feats[l + 1] - s_out).astype(jnp.float32)
+            return jnp.mean(d * d)
 
-            def pair(l, b, a_, kind):
-                mixer, ffn = kind
-                s_out = T.block_forward(
-                    feats[l], b, a_, cfg, mixer, ffn, positions=positions
-                )
-                d = (feats[l + 1] - s_out).astype(jnp.float32)
-                return jnp.mean(d * d)
+        for i in range(pro):
+            loss += pair(i, sbase["prologue"][i], adapters["prologue"][i],
+                         kinds[i])
+        if n_groups:
+            body_kinds = [kinds[pro + j] for j in range(p)]
+            body_feats = feats[pro:pro + n_groups * p + 1]
 
-            for i in range(pro):
-                loss += pair(i, sbase["prologue"][i], adapters["prologue"][i],
-                             kinds[i])
-            if n_groups:
-                body_kinds = [kinds[pro + j] for j in range(p)]
-                body_feats = feats[pro:pro + n_groups * p + 1]
+            def group(carry, xs):
+                acc, idx = carry
+                bs, as_ = xs
+                for j in range(p):
+                    mixer, ffn = body_kinds[j]
+                    fin = jax.lax.dynamic_index_in_dim(
+                        body_feats, idx * p + j, keepdims=False
+                    )
+                    fout = jax.lax.dynamic_index_in_dim(
+                        body_feats, idx * p + j + 1, keepdims=False
+                    )
+                    s_out = T.block_forward(
+                        fin, bs[j], as_[j], cfg, mixer, ffn,
+                        positions=positions,
+                    )
+                    d = (fout - s_out).astype(jnp.float32)
+                    acc = acc + jnp.mean(d * d)
+                return (acc, idx + 1), None
 
-                def group(carry, xs):
-                    acc, idx = carry
-                    bs, as_ = xs
-                    for j in range(p):
-                        mixer, ffn = body_kinds[j]
-                        fin = jax.lax.dynamic_index_in_dim(
-                            body_feats, idx * p + j, keepdims=False
-                        )
-                        fout = jax.lax.dynamic_index_in_dim(
-                            body_feats, idx * p + j + 1, keepdims=False
-                        )
-                        s_out = T.block_forward(
-                            fin, bs[j], as_[j], cfg, mixer, ffn,
-                            positions=positions,
-                        )
-                        d = (fout - s_out).astype(jnp.float32)
-                        acc = acc + jnp.mean(d * d)
-                    return (acc, idx + 1), None
+            (loss, _), _ = jax.lax.scan(
+                group, (loss, 0),
+                (sbase["body"], adapters.get("body")),
+            )
+        for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+            loss += pair(
+                pro + n_groups * p + j, sbase["epilogue"][j],
+                adapters["epilogue"][j], kinds[i],
+            )
+        return loss / cfg.n_layers
 
-                (loss, _), _ = jax.lax.scan(
-                    group, (loss, 0),
-                    (sbase["body"], adapters.get("body")),
-                )
-            for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
-                loss += pair(
-                    pro + n_groups * p + j, sbase["epilogue"][j],
-                    adapters["epilogue"][j], kinds[i],
-                )
-            return loss / cfg.n_layers
+    return loss_fn
 
-        loss, grads = jax.value_and_grad(loss_fn)(state.adapters)
+
+def make_cached_calib_step(cfg, opt: AdamW = AdamW(lr=1e-3)):
+    """Calibration step against cached teacher features: each student
+    block sees feats[l] and matches feats[l+1]. Teacher forward cost: 0."""
+    loss_fn = make_cached_calib_loss(cfg)
+
+    def step(state: CalibState, feats, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            state.adapters, state.student_base, feats, batch
+        )
         adapters, opt_state = adamw_update(
             grads, state.opt_state, state.adapters, opt
         )

@@ -145,7 +145,7 @@ class ServeEngine:
             with self.session.scope():
                 logits, one = serving.prefill_and_cache(
                     self.session.params, jnp.asarray(req.prompt)[None, :],
-                    self.cfg, self.max_len,
+                    self.cfg, self.max_len, mesh=self.session.mesh,
                 )
                 self.cache = T.write_cache_slot(self.cache, one, slot)
             tok, req.key = serving._next_token(logits, req.temperature, req.key)
@@ -178,7 +178,7 @@ class ServeEngine:
             # active backend name, and codes vs codes_adc sessions share
             # identical param avals — a scope-blind fetch would let one
             # hit the other's trace
-            step = serving.decode_step_fn(self.cfg)
+            step = self.session.decode_step()
             logits, self.cache = step(
                 self.session.params, self.cache,
                 jnp.asarray(self.last_tok), jnp.asarray(self.pos),
@@ -214,6 +214,78 @@ class ServeEngine:
         while self.step():
             pass
 
+    # -- elastic degradation -------------------------------------------------
+
+    def remesh(self, new_mesh=None, *, n_failed_hosts: int = 1):
+        """A host dropped mid-serve: re-bind the session to the degraded
+        mesh and rebuild the decode cache by replaying every in-flight
+        slot from its deterministic lifecycle — the prompt plus the
+        already-emitted token stream. Returns the ``ElasticPlan``.
+
+        Without an explicit ``new_mesh``, the plan derives it from the
+        session's current mesh by dropping ``n_failed_hosts`` data-axis
+        rows (``launch.mesh.make_elastic_mesh``); the model axis is
+        untouched, so the wrap policy reshards params identically and
+        replayed decode is bitwise the undisturbed engine's.
+
+        Replay is per-slot batch-1: fused prefill over the prompt, then
+        each recorded token re-fed through single decode steps at its
+        original position (the fused-prefill and per-token paths are not
+        bitwise-interchangeable, so the replay must retrace the engine's
+        actual decode history). Host scheduler state — per-slot clocks,
+        last sampled token, the request's advanced PRNG key — carries
+        over untouched; nothing is resampled.
+        """
+        from repro.launch.mesh import make_elastic_mesh
+        from repro.models import transformer as T
+        from repro.runtime.fault import ElasticPlan
+
+        mesh = self.session.mesh
+        if new_mesh is None:
+            if mesh is None:
+                raise ValueError(
+                    "remesh needs either an explicit new_mesh or a session "
+                    "already bound to a mesh to degrade"
+                )
+            plan = ElasticPlan.plan(
+                n_failed_hosts, self.tick,
+                rows=int(mesh.shape["data"]), cols=int(mesh.shape["model"]),
+            )
+            new_mesh = make_elastic_mesh(n_failed_hosts, base_mesh=mesh)
+        else:
+            dropped = 0
+            if mesh is not None and "data" in mesh.shape:
+                dropped = int(mesh.shape["data"]) - int(
+                    new_mesh.shape.get("data", 1)
+                )
+            plan = ElasticPlan(
+                failed_hosts=max(dropped, 0),
+                new_mesh_shape=tuple(new_mesh.devices.shape),
+                restore_step=self.tick,
+                notes="explicit re-mesh",
+            )
+        self.session.reshard(new_mesh)
+        with self.session.scope():
+            self.cache = T.init_cache(self.cfg, self.max_slots, self.max_len)
+            step = self.session.decode_step()
+            for slot in np.flatnonzero(self.active):
+                req = self.slot_req[slot]
+                _, one = serving.prefill_and_cache(
+                    self.session.params, jnp.asarray(req.prompt)[None, :],
+                    self.cfg, self.max_len, mesh=self.session.mesh,
+                )
+                # re-feed all but the pending last token: token j was
+                # consumed at position prompt_len + j; the engine's
+                # last_tok/pos still point at the un-issued write
+                for j, t in enumerate(req.tokens[:-1]):
+                    _, one = step(
+                        self.session.params, one,
+                        jnp.asarray([[t]], jnp.int32),
+                        jnp.asarray([req.prompt_len + j], jnp.int32),
+                    )
+                self.cache = T.write_cache_slot(self.cache, one, slot)
+        return plan
+
     # -- introspection -------------------------------------------------------
 
     @property
@@ -225,7 +297,7 @@ class ServeEngine:
         step functions — flat across requests once warm (the retrace
         regression metric)."""
         with self.session.scope():
-            return serving.compile_count(self.cfg)
+            return serving.compile_count(self.cfg, self.session.mesh)
 
     def stats(self) -> dict:
         return {

@@ -26,6 +26,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import substrate
 
@@ -69,9 +71,12 @@ def backend_scope(backend: str, cfg=None, **options):
 #
 # The substrate backend is read at TRACE time (substrate.use_backend), so
 # a jitted step is only reusable under the backend it was traced with —
-# the registry key is (cfg, active backend identity). The identity
+# the registry key is (cfg, active backend identity, mesh). The identity
 # includes the backend OPTIONS, not just the name: ``accum="int8"`` and
-# f32 trace to different programs under the same name. Shape variation
+# f32 trace to different programs under the same name. ``mesh`` is None
+# for single-device steps; mesh-native steps wrap the same transformer
+# body in ``shard_map`` and are keyed per mesh so an elastic re-mesh
+# builds fresh steps without evicting the old mesh's. Shape variation
 # within one entry (batch size, prompt length) is handled by jax.jit's
 # own argument cache on the SAME callable, which is exactly what
 # rebuilding the lambda per call threw away.
@@ -79,49 +84,98 @@ def backend_scope(backend: str, cfg=None, **options):
 _STEP_REGISTRY: Dict[Tuple, "jax.stages.Wrapped"] = {}
 
 
-def _registry_get(kind: str, cfg, build):
-    key = (kind, cfg, substrate.active_backend_key())
+def _registry_get(kind: str, cfg, build, mesh: Optional[Mesh] = None):
+    key = (kind, cfg, substrate.active_backend_key(), mesh)
     fn = _STEP_REGISTRY.get(key)
     if fn is None:
         fn = _STEP_REGISTRY[key] = build()
     return fn
 
 
-def decode_step_fn(cfg):
-    """The jitted batched decode step for ``(cfg, active backend)``,
-    built once and shared by every request, session, and the engine.
-    ``pos`` is a (B,) vector of per-slot clocks (scalars broadcast)."""
+def decode_step_fn(cfg, mesh: Optional[Mesh] = None, params=None):
+    """The jitted batched decode step for ``(cfg, active backend,
+    mesh)``, built once and shared by every request, session, and the
+    engine. ``pos`` is a (B,) vector of per-slot clocks (scalars
+    broadcast).
+
+    With a mesh, the same transformer body runs under ``shard_map``:
+    params follow ``substrate.serve_param_specs`` (column-sharded
+    prepared operands over the "model" axis, the DoRA epilogue psum
+    inside the backend), tokens/cache/logits replicate. ``params`` (the
+    session's sharded tree) is required then — the in_specs are derived
+    from which leaves are actually wrapped."""
     from repro.models import transformer as T
 
-    return _registry_get(
-        "decode", cfg,
-        lambda: jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg)),
-    )
+    if mesh is None:
+        return _registry_get(
+            "decode", cfg,
+            lambda: jax.jit(lambda p, c, t, i: T.decode_step(p, c, t, i, cfg)),
+        )
+    if params is None:
+        raise ValueError("mesh decode steps derive in_specs from params")
+
+    def build():
+        specs = substrate.serve_param_specs(params)
+        sm = shard_map(
+            lambda p, c, t, i: T.decode_step(p, c, t, i, cfg),
+            mesh=mesh,
+            in_specs=(specs, P(), P(), P()),
+            out_specs=(P(), P()),
+            check_rep=False,
+        )
+        return jax.jit(sm)
+
+    return _registry_get("decode", cfg, build, mesh=mesh)
 
 
-def prefill_fn(cfg):
-    """The jitted fused prefill for ``(cfg, active backend)``: one
+def prefill_fn(cfg, mesh: Optional[Mesh] = None, params=None):
+    """The jitted fused prefill for ``(cfg, active backend, mesh)``: one
     full-sequence forward returning (last logits, decode cache) —
-    ``max_len`` is static (cache buffer extent)."""
+    ``max_len`` is static (cache buffer extent). The mesh path is
+    decoder-only (no enc_embeds)."""
     from repro.models import transformer as T
 
-    return _registry_get(
-        "prefill", cfg,
-        lambda: jax.jit(
-            lambda p, t, max_len, e=None: T.prefill(p, t, cfg, max_len, e),
-            static_argnums=(2,),
-        ),
-    )
+    if mesh is None:
+        return _registry_get(
+            "prefill", cfg,
+            lambda: jax.jit(
+                lambda p, t, max_len, e=None: T.prefill(p, t, cfg, max_len, e),
+                static_argnums=(2,),
+            ),
+        )
+    if params is None:
+        raise ValueError("mesh prefill steps derive in_specs from params")
+
+    def build():
+        specs = substrate.serve_param_specs(params)
+
+        def fn(p, t, max_len, e=None):
+            if e is not None:
+                raise ValueError("mesh serving is decoder-only (no enc_embeds)")
+            sm = shard_map(
+                lambda p, t: T.prefill(p, t, cfg, max_len, None),
+                mesh=mesh,
+                in_specs=(specs, P()),
+                out_specs=(P(), P()),
+                check_rep=False,
+            )
+            return sm(p, t)
+
+        return jax.jit(fn, static_argnums=(2,))
+
+    return _registry_get("prefill", cfg, build, mesh=mesh)
 
 
-def compile_count(cfg) -> int:
-    """Total compiled-computation count across this (cfg, backend)'s
-    step functions. Flat across repeated same-shape requests — the
-    regression tests and ``benchmarks/serve_bench.py`` track it as the
-    retrace counter."""
+def compile_count(cfg, mesh: Optional[Mesh] = None) -> int:
+    """Total compiled-computation count across this (cfg, backend,
+    mesh)'s step functions. Flat across repeated same-shape requests —
+    the regression tests and ``benchmarks/serve_bench.py`` track it as
+    the retrace counter."""
     total = 0
     for kind in ("decode", "prefill"):
-        fn = _STEP_REGISTRY.get((kind, cfg, substrate.active_backend_key()))
+        fn = _STEP_REGISTRY.get(
+            (kind, cfg, substrate.active_backend_key(), mesh)
+        )
         if fn is not None:
             # _cache_size is private jax API; the zero-recompile test's
             # `warm > 0` assertion is the canary if an upgrade drops it
@@ -130,7 +184,10 @@ def compile_count(cfg) -> int:
     return total
 
 
-def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
+def prefill_and_cache(
+    params, tokens, cfg, max_len: int, enc_embeds=None,
+    mesh: Optional[Mesh] = None,
+):
     """Fused prefill: ONE full-sequence forward computes every layer's
     K/V (MLA latents, recurrent states) batched over the prompt and
     scatters them into the decode cache — replaces the old per-token
@@ -139,7 +196,7 @@ def prefill_and_cache(params, tokens, cfg, max_len: int, enc_embeds=None):
     is pinned in tests/test_engine.py."""
     if cfg.encoder_layers and enc_embeds is None:
         raise ValueError("encoder-decoder config needs enc_embeds")
-    return prefill_fn(cfg)(params, tokens, int(max_len), enc_embeds)
+    return prefill_fn(cfg, mesh, params)(params, tokens, int(max_len), enc_embeds)
 
 
 def _next_token(logits, temperature: float, key):
@@ -206,11 +263,50 @@ class ServeSession:
     custom serving loops can also reach in directly (inside
     ``session.scope()``)."""
 
-    def __init__(self, deployment, params, options: Optional[dict] = None):
+    def __init__(
+        self, deployment, params, options: Optional[dict] = None,
+        mesh: Optional[Mesh] = None,
+    ):
         self.deployment = deployment
+        # the unwrapped single-device tree is kept as the re-mesh source:
+        # elastic degradation re-wraps + re-places it on the new mesh
+        self._host_params = params
         self.params = params
         self.options = dict(options or {})
+        self.mesh = None
+        self.shard_stats: Optional[dict] = None
         self._auto_key_calls = 0
+        if mesh is not None:
+            self.reshard(mesh)
+
+    def reshard(self, mesh: Optional[Mesh]):
+        """(Re)bind this session to ``mesh``: wrap every column-shardable
+        prepared leaf (``substrate.shard_prepared_for_serve``) and place
+        the tree with ``NamedSharding``. ``None`` returns the session to
+        the single-device tree. Step functions for the new mesh build
+        lazily on first use (the registry keys on mesh)."""
+        if mesh is None:
+            self.mesh = None
+            self.params = self._host_params
+            self.shard_stats = None
+            return self
+        if self.backend != "codes":
+            raise ValueError(
+                f"mesh serving runs the prepared codes fast path; "
+                f"backend={self.backend!r} is single-device"
+            )
+        wrapped, stats = substrate.shard_prepared_for_serve(
+            self._host_params, mesh
+        )
+        self.params = substrate.place_serve_params(wrapped, mesh)
+        self.mesh = mesh
+        self.shard_stats = stats
+        return self
+
+    def decode_step(self):
+        """This session's jitted decode step (mesh-aware). Call inside
+        ``scope()``."""
+        return decode_step_fn(self.cfg, self.mesh, self.params)
 
     @property
     def cfg(self):
@@ -241,7 +337,8 @@ class ServeSession:
     def prefill(self, tokens, max_len: int, enc_embeds=None):
         with self.scope():
             return prefill_and_cache(
-                self.params, tokens, self.cfg, max_len, enc_embeds
+                self.params, tokens, self.cfg, max_len, enc_embeds,
+                mesh=self.mesh,
             )
 
     def generate(
@@ -255,6 +352,8 @@ class ServeSession:
         reference loop (the engine is decoder-only)."""
         key = self._sampling_key(temperature, key)
         if self.cfg.encoder_layers:
+            if self.mesh is not None:
+                raise ValueError("mesh serving is decoder-only")
             with self.scope():
                 return generate(
                     self.params, prompt, self.cfg, gen_len=gen_len,

@@ -48,6 +48,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import substrate
 from repro.checkpoint.manager import as_manager
@@ -55,6 +57,7 @@ from repro.core import calibrate as C
 from repro.core import rram
 from repro.core.calibrate import (
     CalibState,
+    make_cached_calib_loss,
     make_cached_calib_step,
     make_calib_step,
     rram_bytes,
@@ -69,7 +72,8 @@ from repro.deploy.deployment import (
 )
 from repro.deploy import serving
 from repro.models import transformer as T
-from repro.optim.adam import AdamW, adamw_init
+from repro.optim.adam import AdamW, adamw_init, adamw_update
+from repro.optim.compress import allreduce_compressed
 
 Pytree = Any
 
@@ -207,6 +211,119 @@ def _calib_step_fn(cfg, opt: AdamW, kind: str, axes: Pytree):
 
     key = (kind, cfg, opt, substrate.active_backend_name())
     return _registry_get(key, build_cached if kind == "cached" else build_full)
+
+
+def _axes_to_specs(axes_tree: Pytree) -> Pytree:
+    """Chip-axis prefix tree (0/None per chip_axes) -> PartitionSpec
+    prefix tree over the "data" mesh axis: chip-stacked leaves shard
+    their leading dim, shared peripherals replicate."""
+    return jax.tree_util.tree_map(
+        lambda a: P("data") if a == 0 else P(),
+        axes_tree, is_leaf=lambda v: v is None,
+    )
+
+
+def _fleet_state_shardings(state: CalibState, axes: Pytree, mesh) -> CalibState:
+    """NamedSharding tree matching a gathered CalibState: chip-axis
+    leaves distribute over "data", the teacher and shared peripherals
+    replicate — the placement under which the ordinary vmapped step is
+    bitwise the single-device run (chips are independent rows)."""
+    rep = NamedSharding(mesh, P())
+    dat = NamedSharding(mesh, P("data"))
+
+    def base_leaf(x, a):
+        ns = dat if a == 0 else rep
+        if _is_cw(x):
+            return rram.CrossbarWeight(ns, ns, ns)
+        return ns
+
+    return CalibState(
+        jax.tree_util.tree_map(lambda x: rep, state.teacher_base),
+        jax.tree_util.tree_map(
+            base_leaf, state.student_base, axes, is_leaf=_is_cw
+        ),
+        jax.tree_util.tree_map(lambda x: dat, state.adapters),
+        jax.tree_util.tree_map(lambda x: dat, state.opt_state),
+        dat,
+    )
+
+
+def _mesh_calib_step_fn(cfg, opt: AdamW, axes: Pytree, mesh):
+    """The compressed-gradient mesh calibration step: ONE shard_map over
+    the "data" axis, each device advancing its local block of chips
+    against the replicated teacher-feature cache.
+
+    The cross-device reduction is where ``optim.compress`` plugs in:
+    each device scatters its local per-chip adapter gradients into a
+    zero canvas at its chip offset, and ``allreduce_compressed``
+    (error-feedback int8) assembles the global per-chip gradient stack —
+    a mean over devices whose contributions are disjoint blocks, undone
+    by the ``* n_dev`` rescale. Each device then slices its own block
+    back out and applies the optimizer locally, so the update trajectory
+    differs from the exact run only by the int8 quantization error,
+    which the per-device residual feeds back into the next step.
+    Reported losses are assembled with an EXACT psum (pre-update, so
+    they are comparable step-for-step against the dense path)."""
+    loss_fn = make_cached_calib_loss(cfg)
+    n_dev = int(mesh.shape["data"])
+    state_specs = CalibState(P(), _axes_to_specs(axes), P("data"), P("data"), P("data"))
+
+    def build():
+        def body(state, feats, batch, residual):
+            dev = jax.lax.axis_index("data")
+            vg = jax.vmap(
+                jax.value_and_grad(loss_fn), in_axes=(0, axes, None, None)
+            )
+            losses, grads = vg(
+                state.adapters, state.student_base, feats, batch
+            )
+            n_local = losses.shape[0]
+
+            def scatter(g):
+                full = jnp.zeros(
+                    (n_local * n_dev,) + g.shape[1:], jnp.float32
+                )
+                start = (dev * n_local,) + (0,) * (g.ndim - 1)
+                return jax.lax.dynamic_update_slice(
+                    full, g.astype(jnp.float32), start
+                )
+
+            loss_full = jax.lax.psum(scatter(losses), "data")
+            res_local = jax.tree_util.tree_map(lambda r: r[0], residual)
+            g_full = jax.tree_util.tree_map(scatter, grads)
+            reduced, new_res = allreduce_compressed(
+                g_full, res_local, "data"
+            )
+
+            def localize(g):
+                start = (dev * n_local,) + (0,) * (g.ndim - 1)
+                return jax.lax.dynamic_slice(
+                    g * n_dev, start, (n_local,) + g.shape[1:]
+                )
+
+            g_local = jax.tree_util.tree_map(localize, reduced)
+            new_adapters, new_opt = jax.vmap(
+                lambda g, o, a_: adamw_update(g, o, a_, opt)
+            )(g_local, state.opt_state, state.adapters)
+            new_state = CalibState(
+                state.teacher_base, state.student_base, new_adapters,
+                new_opt, state.step + 1,
+            )
+            new_residual = jax.tree_util.tree_map(
+                lambda r: r[None], new_res
+            )
+            return new_state, {"loss": loss_full}, new_residual
+
+        sm = shard_map(
+            body, mesh=mesh,
+            in_specs=(state_specs, P(), P(), P("data")),
+            out_specs=(state_specs, P(), P("data")),
+            check_rep=False,
+        )
+        return jax.jit(sm)
+
+    key = ("mesh_compressed", cfg, opt, substrate.active_backend_name(), mesh)
+    return _registry_get(key, build)
 
 
 def _logits_fn(cfg, axes: Pytree, use_adapters: bool):
@@ -486,6 +603,7 @@ class Fleet:
         seq_len: int = 32, chips=None, cached_teacher: Optional[bool] = None,
         loss_threshold: float = 0.0, registry=None,
         warm_start: bool = False, record: bool = True,
+        mesh: Optional[Mesh] = None, grad_compress: bool = False,
     ) -> FleetCalibrationReport:
         """Algorithm 1 for ``chips`` (default: all) as ONE vmapped loop:
         the frozen teacher's features are computed once and shared by
@@ -504,7 +622,19 @@ class Fleet:
         references in one batched scatter before the loop
         (``registry/warmstart.seed_fleet``); ``record=True`` persists
         each chip's result as a versioned artifact under its own
-        ``(cfg, backend, drift signature)`` key afterwards."""
+        ``(cfg, backend, drift signature)`` key afterwards.
+
+        Mesh parallelism: with ``mesh`` (axes ("data", ...)) the chip
+        axis shards over the "data" axis — the one vmapped loop runs
+        chip blocks on separate devices while the teacher-feature cache
+        is broadcast once. Bitwise equal to the single-device run (chips
+        are independent batch rows). ``grad_compress=True`` additionally
+        routes the per-chip adapter gradients through the error-feedback
+        int8 ``optim.compress.allreduce_compressed`` cross-device
+        reduction (``_mesh_calib_step_fn``): losses stay exact, the
+        adapter trajectory tracks the exact one within quantization
+        tolerance. Requires the cached-teacher path and ``len(chips)``
+        divisible by the data-axis size."""
         cfg = self.cfg
         opt = opt if opt is not None else AdamW(lr=lr)
         chips = self._chip_list(chips)
@@ -514,6 +644,20 @@ class Fleet:
         use_cached = cacheable if cached_teacher is None else (
             cached_teacher and cacheable
         )
+        if grad_compress and mesh is None:
+            raise ValueError("grad_compress needs a mesh to reduce across")
+        if mesh is not None:
+            if not use_cached:
+                raise ValueError(
+                    "mesh fleet calibration runs the cached-teacher path; "
+                    "this config (or cached_teacher=False) is not cacheable"
+                )
+            n_dev = int(mesh.shape["data"])
+            if len(chips) % n_dev:
+                raise ValueError(
+                    f"{len(chips)} selected chips do not divide over the "
+                    f"data axis ({n_dev} devices); pad the chip selection"
+                )
         if self.opt_state is None:
             self.opt_state = jax.vmap(adamw_init)(self.adapters)
         warm_recs = [None] * len(chips)
@@ -537,8 +681,41 @@ class Fleet:
             axes = self._base_axes
             if use_cached:
                 feats = teacher_features(self.teacher_base, batch, cfg)
-                step_fn = _calib_step_fn(cfg, opt, "cached", axes)
-                run = lambda s: step_fn(s, feats, batch)
+                if mesh is not None:
+                    # chip-axis leaves distribute over "data"; the
+                    # teacher features / batch broadcast ONCE (device_put
+                    # here, not per step inside the loop)
+                    rep = NamedSharding(mesh, P())
+                    state = jax.device_put(
+                        state, _fleet_state_shardings(state, axes, mesh)
+                    )
+                    feats = jax.device_put(feats, rep)
+                    batch = jax.device_put(
+                        batch, jax.tree_util.tree_map(lambda x: rep, batch)
+                    )
+                if grad_compress:
+                    step_fn = _mesh_calib_step_fn(cfg, opt, axes, mesh)
+                    res = {
+                        "r": jax.device_put(
+                            jax.tree_util.tree_map(
+                                lambda x: jnp.zeros(
+                                    (int(mesh.shape["data"]),) + x.shape,
+                                    jnp.float32,
+                                ),
+                                state.adapters,
+                            ),
+                            NamedSharding(mesh, P("data")),
+                        )
+                    }
+
+                    def run(s):
+                        s2, metrics, res["r"] = step_fn(
+                            s, feats, batch, res["r"]
+                        )
+                        return s2, metrics
+                else:
+                    step_fn = _calib_step_fn(cfg, opt, "cached", axes)
+                    run = lambda s: step_fn(s, feats, batch)
             else:
                 step_fn = _calib_step_fn(cfg, opt, "full", axes)
                 run = lambda s: step_fn(s, batch)
@@ -549,6 +726,9 @@ class Fleet:
                     np.all(losses[-1] <= loss_threshold)
                 ):
                     break
+        if mesh is not None:
+            # pull the sharded result back before the host-side scatter
+            state = jax.device_get(state)
         self.adapters = jax.tree_util.tree_map(
             lambda full, sub: full.at[idx].set(sub),
             self.adapters, state.adapters,

@@ -139,7 +139,14 @@ class RecalibrationScheduler:
     comes from calibration effort, not a rank change) and flag the chip
     in ``FleetReport.hard_faulted_chips``. A hard-faulted chip is
     excluded from the drift path that tick. ``hard_threshold=None``
-    disables the hard path entirely (legacy behaviour)."""
+    disables the hard path entirely (legacy behaviour).
+
+    ``mesh`` shards every triggered calibration over the mesh's "data"
+    axis (``Fleet.calibrate(mesh=...)``); ``grad_compress`` additionally
+    routes the cross-device adapter-gradient reduction through the
+    int8 error-feedback collective. Ticks whose due-chip count does not
+    divide over the data axis fall back to the single-device path for
+    that call — correctness never depends on the mesh."""
 
     def __init__(
         self, fleet: Fleet, *, threshold: float,
@@ -147,6 +154,7 @@ class RecalibrationScheduler:
         hard_threshold: Optional[float] = None,
         hard_calib_args: Optional[Dict[str, Any]] = None,
         registry=None, warm_start: bool = True,
+        mesh=None, grad_compress: bool = False,
     ):
         if threshold <= 0:
             raise ValueError(f"threshold must be > 0, got {threshold}")
@@ -172,6 +180,8 @@ class RecalibrationScheduler:
         # back into) the versioned calibration registry when one is given
         self.registry = registry
         self.warm_start = bool(warm_start) and registry is not None
+        self.mesh = mesh
+        self.grad_compress = bool(grad_compress)
         self.history: List[TickRecord] = []
         self._last_loss = np.full(fleet.n_chips, np.nan, np.float64)
         self._per_chip_recals = [0] * fleet.n_chips
@@ -233,7 +243,8 @@ class RecalibrationScheduler:
         report = None
         if due:
             report = fleet.calibrate(
-                chips=due, **self.calib_args, **registry_args
+                chips=due, **self.calib_args, **registry_args,
+                **self._mesh_args(len(due)),
             )
             for j, c in enumerate(due):
                 self._per_chip_recals[c] += 1
@@ -242,7 +253,8 @@ class RecalibrationScheduler:
         hard_report = None
         if hard_due:
             hard_report = fleet.calibrate(
-                chips=hard_due, **self.hard_calib_args, **registry_args
+                chips=hard_due, **self.hard_calib_args, **registry_args,
+                **self._mesh_args(len(hard_due)),
             )
             for j, c in enumerate(hard_due):
                 self._per_chip_hard_recals[c] += 1
@@ -257,6 +269,15 @@ class RecalibrationScheduler:
         )
         self.history.append(record)
         return record
+
+    def _mesh_args(self, n_due: int) -> Dict[str, Any]:
+        """Mesh kwargs for one triggered calibrate call, or empty when
+        no mesh is configured / the due set doesn't divide over it."""
+        if self.mesh is None:
+            return {}
+        if n_due % int(self.mesh.shape["data"]):
+            return {}
+        return {"mesh": self.mesh, "grad_compress": self.grad_compress}
 
     def _account_epochs(self, report, args: Dict[str, Any]) -> None:
         """Steps-to-converge accounting for one batched calibrate call:

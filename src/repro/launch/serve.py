@@ -17,6 +17,13 @@ not an estimate.
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 16 --gen 8 [--backend codes]
+
+Tensor-parallel serving (codes backend only) shards the prepared tree
+over a ("data", "model") mesh; on CPU, force the device count BEFORE
+python starts:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --backend codes --mesh-model 4
 """
 from __future__ import annotations
 
@@ -71,14 +78,32 @@ def main():
         "--backend", default="dequant", choices=BACKENDS,
         help="substrate execution backend (see repro/substrate)",
     )
+    ap.add_argument(
+        "--mesh-model", type=int, default=0,
+        help="tensor-parallel degree: shard serving over a (1, N) "
+             "('data', 'model') mesh (codes backend only; needs >= N "
+             "devices — on CPU set XLA_FLAGS device forcing first)",
+    )
     args = ap.parse_args()
     arch = get_arch(args.arch)
     cfg = arch.smoke if args.smoke else arch.full
 
+    mesh = None
+    if args.mesh_model > 1:
+        from repro.launch.mesh import make_host_mesh
+
+        if jax.device_count() < args.mesh_model:
+            raise SystemExit(
+                f"--mesh-model {args.mesh_model} needs that many devices; "
+                f"only {jax.device_count()} visible (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N before launch)"
+            )
+        mesh = make_host_mesh((1, args.mesh_model))
+
     dep = deploy.Deployment.program(cfg, args.seed, backend=args.backend)
     if args.drift_hours > 0:
         dep.advance(args.drift_hours)
-    session = dep.serve()
+    session = dep.serve(mesh=mesh)
     print(session.describe())
 
     # independent streams for the prompt tokens and the encoder embeds —

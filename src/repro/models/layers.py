@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core import dora
 from repro.core.dora import AdapterConfig
 from repro.core.rram import CrossbarWeight
-from repro.substrate.prepared import PreparedCrossbar
+from repro.substrate.prepared import PreparedCrossbar, ShardedPrepared
 
 Pytree = Any
 
@@ -67,11 +67,12 @@ def linear(
     ``repro/substrate``); float leaves keep the plain jnp path.
     """
     w = base["w"]
-    if isinstance(w, CrossbarWeight) or isinstance(w, PreparedCrossbar):
+    if isinstance(w, (CrossbarWeight, PreparedCrossbar, ShardedPrepared)):
         from repro.substrate import crossbar_linear
 
         # PreparedCrossbar (serve-time padded/fused codes with the
-        # adapter baked in — substrate/prepared.py) ignores ``adapter``.
+        # adapter baked in — substrate/prepared.py) ignores ``adapter``;
+        # ShardedPrepared is its tensor-parallel form inside shard_map.
         return crossbar_linear(x, w, adapter, acfg, backend=backend)
     if adapter:
         return dora.adapted_forward(x, w, adapter, acfg)

@@ -10,9 +10,18 @@ trajectory tracks the exact one; Karimireddy et al. 2019).
 
 Usage (inside shard_map over the data axes):
 
-    qgrads, new_residual = compress(grads, residual)
-    qgrads = jax.lax.psum(qgrads, axis_name)   # int8 summed as f32 counts
-    grads = decompress(qgrads, n_shards)
+    residual = init_residual(grads)            # once, before the loop
+    ...
+    grads, residual = allreduce_compressed(grads, residual, axis_name)
+
+or, driving the pieces by hand (``compress`` returns a 3-tuple — the
+per-leaf scales travel with the codes):
+
+    codes, scales, residual = compress(grads, residual)
+    grads = tree_map(
+        lambda c, s: jax.lax.psum(c.astype(f32) * s, axis_name) / n_shards,
+        codes, scales,
+    )
 """
 from __future__ import annotations
 

@@ -76,25 +76,39 @@ class StragglerReport:
 
 
 class StragglerDetector:
-    """Robust (median/MAD) outlier detection over recent step times."""
+    """Robust (median/MAD) outlier detection over recent step times.
+
+    A single flagged step is noise (GC pause, one slow collective); the
+    re-mesh policy acts on ``persistent()`` — at least ``k`` of the most
+    recent ``horizon`` steps flagged — which a one-off spike can never
+    satisfy but a thermally-throttled host does within ``k`` steps."""
 
     def __init__(self, window: int = 64, min_samples: int = 16):
         self.times: Deque[float] = collections.deque(maxlen=window)
         self.min_samples = min_samples
         self.reports: List[StragglerReport] = []
+        self._flags: Deque[bool] = collections.deque(maxlen=window)
 
     def record(self, step: int, step_time: float) -> Optional[StragglerReport]:
         self.times.append(step_time)
         if len(self.times) < self.min_samples:
+            self._flags.append(False)
             return None
         arr = np.asarray(self.times)
         med = float(np.median(arr))
         mad = float(np.median(np.abs(arr - med))) + 1e-9
         z = 0.6745 * (step_time - med) / mad
         report = StragglerReport(step, step_time, med, mad, float(z))
+        self._flags.append(report.is_straggler)
         if report.is_straggler:
             self.reports.append(report)
         return report
+
+    def persistent(self, k: int = 3, horizon: int = 8) -> bool:
+        """True when >= ``k`` of the last ``horizon`` recorded steps were
+        flagged — the signal that justifies excluding the host."""
+        recent = list(self._flags)[-horizon:]
+        return sum(recent) >= k
 
 
 @dataclasses.dataclass
@@ -107,13 +121,19 @@ class ElasticPlan:
     notes: str = ""
 
     @staticmethod
-    def plan(failed_hosts: int, latest_step: Optional[int], *, rows: int = 16):
+    def plan(
+        failed_hosts: int, latest_step: Optional[int], *,
+        rows: int = 16, cols: int = 16,
+    ):
+        """``rows``/``cols`` are the current ("data", "model") extents —
+        the production 16x16 by default; serve engines pass their actual
+        mesh shape. Only the data axis shrinks."""
         new_rows = rows - failed_hosts
         if new_rows < 1:
             raise RuntimeError("insufficient healthy capacity for re-mesh")
         return ElasticPlan(
             failed_hosts=failed_hosts,
-            new_mesh_shape=(new_rows, 16),
+            new_mesh_shape=(new_rows, cols),
             restore_step=latest_step or 0,
             notes=(
                 "model axis preserved (param shardings stable); data axis "

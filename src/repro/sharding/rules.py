@@ -33,6 +33,12 @@ PARAM_RULES: Sequence[Tuple[str, Tuple]] = (
     (r"mixer/(q|k|v|k_up|v_up)/w$", (None, "T")),
     (r"mixer/kv_down/w$", (None, None)),  # tiny MLA latent projection
     (r"mixer/o/w$", ("T", None)),
+    # serve-time fused leaves (substrate/prepared.py concatenates
+    # same-input siblings over N): columns stay column-parallel. The
+    # _q_kvd fusion drags the tiny kv_down columns along — harmless,
+    # column independence makes any contiguous partition exact.
+    (r"mixer/(_qkv|_q_kvd|_kup_vup)/w$", (None, "T")),
+    (r"ffn(/shared)?/_gate_up/w$", (None, "T")),
     (r"xattn/(q|k|v)/w$", (None, "T")),
     (r"xattn/o/w$", ("T", None)),
     # dense MLP
@@ -60,7 +66,12 @@ PARAM_RULES: Sequence[Tuple[str, Tuple]] = (
     (r"mixer/(in_x|in_y|gate_a|gate_x)/w$", (None, "T")),
     (r"mixer/out/w$", ("T", None)),
     (r"mixer/lambda_p$", ("T",)),
-    # adapters (lora_a/lora_b/dora_m) + norms + everything else: replicated
+    # norms: EXPLICITLY replicated — stacked-over-layers scale/bias grow
+    # past the large-leaf threshold on deep configs, and an explicit rule
+    # keeps unmatched_large_leaves() meaning "rules-table gap", not
+    # "known-replicated peripheral"
+    (r"norm\d*/(scale|bias)$", ()),
+    # adapters (lora_a/lora_b/dora_m) + everything else: replicated
 )
 
 CACHE_RULES: Sequence[Tuple[str, Tuple]] = (
@@ -156,36 +167,80 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def _resolve_spec(
-    rules, path: str, shape: Tuple[int, ...], mesh: Mesh,
-    dp: Tuple[str, ...], tp: str,
-) -> P:
+def match_rule(rules, path: str) -> Optional[Tuple]:
+    """First rule spec whose pattern matches `path`, else None."""
     for pat, spec in rules:
         if re.search(pat, path):
-            if spec and spec[0] == "EP":
-                # expert-parallel preferred: shard E over tp; fall back to
-                # the 2D (D, T) layout when E doesn't divide the model axis.
-                # Stacked scan bodies carry a leading group axis -> 4D.
-                e = shape[-3] if len(shape) >= 3 else 0
-                if e and e % mesh.shape[tp] == 0:
-                    spec = ("T", None, None)
-                else:
-                    spec = (None,) + tuple(spec[1:])
-            spec = spec[-len(shape):] if len(spec) > len(shape) else spec
-            pad = len(shape) - len(spec)
-            axes = [None] * pad + [
-                (dp if s == "D" else tp if s == "T" else None) for s in spec
-            ]
-            # divisibility guard per dim
-            out = []
-            for dim, a in zip(shape, axes):
-                if a is None:
-                    out.append(None)
-                    continue
-                size = int(np.prod([mesh.shape[x] for x in _as_tuple(a)]))
-                out.append(a if dim % size == 0 else None)
-            return P(*out)
-    return P()  # replicated
+            return spec
+    return None
+
+
+def serve_tp_shardable(path: str, rules=PARAM_RULES) -> bool:
+    """True when `path` matches a rule that tensor-parallelises ("T"
+    anywhere in the spec). Used by the serve-TP wrap policy to decide
+    which prepared leaves to column-shard vs leave replicated."""
+    spec = match_rule(rules, path)
+    return spec is not None and "T" in spec
+
+
+def resolve_spec(
+    path: str,
+    shape: Tuple[int, ...],
+    axis_sizes,
+    rules=PARAM_RULES,
+    *,
+    dp: Tuple[str, ...] = ("data",),
+    tp: str = "model",
+) -> P:
+    """Resolve a leaf path+shape to a PartitionSpec against a mapping of
+    mesh axis name -> size (a live `mesh.shape` works, as does a plain
+    dict — no devices required, so the zoo tests run on one device)."""
+    spec = match_rule(rules, path)
+    if spec is None:
+        return P()  # replicated
+    if spec and spec[0] == "EP":
+        # expert-parallel preferred: shard E over tp; fall back to
+        # the 2D (D, T) layout when E doesn't divide the model axis.
+        # Stacked scan bodies carry a leading group axis -> 4D.
+        e = shape[-3] if len(shape) >= 3 else 0
+        if e and e % axis_sizes[tp] == 0:
+            spec = ("T", None, None)
+        else:
+            spec = (None,) + tuple(spec[1:])
+    spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+    pad = len(shape) - len(spec)
+    axes = [None] * pad + [
+        (dp if s == "D" else tp if s == "T" else None) for s in spec
+    ]
+    # divisibility guard per dim
+    out = []
+    for dim, a in zip(shape, axes):
+        if a is None:
+            out.append(None)
+            continue
+        size = int(np.prod([axis_sizes[x] for x in _as_tuple(a)]))
+        out.append(a if dim % size == 0 else None)
+    return P(*out)
+
+
+def unmatched_large_leaves(
+    abstract_tree: Pytree,
+    *,
+    min_size: int = 65536,
+    rules=PARAM_RULES,
+):
+    """Leaf paths with >= min_size elements that match no rule — i.e.
+    weights that would silently replicate. Adapter/norm leaves are small
+    by design; anything big and unmatched is a rules-table gap."""
+    bad = []
+
+    def leaf(path, x):
+        p = _path_str(path)
+        if int(np.prod(x.shape)) >= min_size and match_rule(rules, p) is None:
+            bad.append((p, tuple(x.shape)))
+
+    jax.tree_util.tree_map_with_path(leaf, abstract_tree)
+    return bad
 
 
 def tree_shardings(
@@ -197,7 +252,7 @@ def tree_shardings(
     tp: str = "model",
 ) -> Pytree:
     def leaf(path, x):
-        spec = _resolve_spec(rules, _path_str(path), x.shape, mesh, dp, tp)
+        spec = resolve_spec(_path_str(path), x.shape, mesh.shape, rules, dp=dp, tp=tp)
         return NamedSharding(mesh, spec)
 
     return jax.tree_util.tree_map_with_path(leaf, abstract_tree)

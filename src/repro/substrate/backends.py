@@ -37,8 +37,10 @@ from repro.core.rram import CrossbarWeight, RramConfig, dequantize
 from repro.substrate import exec as X
 from repro.substrate.prepared import (
     PreparedCrossbar,
+    ShardedPrepared,
     prepared_ref_forward,
     rimc_linear_prepared,
+    tp_column_allgather,
 )
 
 DEFAULT_BACKEND = "codes"
@@ -189,6 +191,12 @@ class DequantBackend(Backend):
     name = "dequant"
 
     def linear(self, x, xw, adapter, acfg):
+        if isinstance(xw, ShardedPrepared):
+            raise TypeError(
+                "dequant reads full-extent prepared leaves; a sharded "
+                "serve tree only executes inside the codes backend's "
+                "shard_map decode step"
+            )
         if isinstance(xw, PreparedCrossbar):
             # prepared trees bake their adapters in; the float view is
             # the true-extent reference forward
@@ -207,6 +215,15 @@ class CodesBackend(Backend):
     name = "codes"
 
     def linear(self, x, xw, adapter, acfg, *, accum="f32"):
+        if isinstance(xw, ShardedPrepared):
+            # tensor-parallel leaf inside a shard_map decode step: run
+            # the ordinary prepared kernel on this device's column
+            # slice, then the zero-scatter psum epilogue rebuilds the
+            # full activation bitwise (columns are disjoint).
+            y = rimc_linear_prepared(
+                x, xw.local, interpret=X.default_interpret(), accum=accum
+            )
+            return tp_column_allgather(y, xw.n_total, xw.axis)
         if isinstance(xw, PreparedCrossbar):
             # serve-time prepared leaf: operands already padded/fused
             # (+ s8-recoded for int8); per-call work is the x pad only

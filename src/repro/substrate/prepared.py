@@ -40,6 +40,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.rram import CrossbarWeight
 from repro.kernels import autotune
@@ -315,3 +316,149 @@ def prepare_base_for_serve(
         return b
 
     return walk(base, adapters)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving (ISSUE 9): column-sharded prepared leaves
+# ---------------------------------------------------------------------------
+
+_PREP_FIELDS = (
+    "g_pos", "g_neg", "scale", "lora_a", "lora_b", "gamma",
+    "g_pos_s8", "g_neg_s8",
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedPrepared:
+    """Column-parallel wrapper around one ``PreparedCrossbar``.
+
+    Outside ``shard_map`` the inner arrays are the full global operands,
+    placed with ``NamedSharding`` over the last dim; inside the decode
+    step's ``shard_map`` body each device sees its ``n_total //
+    mesh.shape[axis]`` column slice, which is exactly what the inner
+    aux advertises (``local.n`` is the per-shard width). The backend
+    runs the ordinary prepared kernel on the local slice and the DoRA
+    epilogue finishes with ``tp_column_allgather`` — a zero-scatter +
+    ``psum`` over ``axis`` that is bitwise-exact because every output
+    column is produced by exactly one shard with the full K reduction.
+
+    Only unpadded leaves whose true N divides the axis size are wrapped
+    (see ``shard_prepared_for_serve``); everything else replicates,
+    which is bitwise-safe by construction.
+    """
+
+    local: PreparedCrossbar   # aux (k, n, splits) describe the PER-SHARD view
+    n_total: int
+    axis: str = "model"
+
+    def tree_flatten(self):
+        return (self.local,), (self.n_total, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+def tp_column_allgather(y: jax.Array, n_total: int, axis: str) -> jax.Array:
+    """DoRA-epilogue collective: place the local column block of ``y``
+    into a zero canvas at this shard's offset and ``psum`` over ``axis``.
+    Disjoint blocks -> each output element is one shard's value plus
+    exact zeros, so the result matches the unsharded kernel bitwise."""
+    n_local = y.shape[-1]
+    i = jax.lax.axis_index(axis)
+    full = jnp.zeros(y.shape[:-1] + (n_total,), y.dtype)
+    start = (0,) * (y.ndim - 1) + (i * n_local,)
+    full = jax.lax.dynamic_update_slice(full, y, start)
+    return jax.lax.psum(full, axis)
+
+
+def _prep_like(prep: PreparedCrossbar, fn, aux=None) -> PreparedCrossbar:
+    """A PreparedCrossbar whose array children are ``fn(name, child)``
+    (None children pass through); aux defaults to ``prep``'s own, so the
+    result has the same treedef — required for shard_map spec trees."""
+    children, old_aux = prep.tree_flatten()
+    new = tuple(
+        None if c is None else fn(nm, c)
+        for nm, c in zip(_PREP_FIELDS, children)
+    )
+    return PreparedCrossbar.tree_unflatten(aux or old_aux, new)
+
+
+def shard_prepared_for_serve(params, mesh, *, tp: str = "model"):
+    """Wrap every column-shardable ``PreparedCrossbar`` leaf of a serve
+    params tree in ``ShardedPrepared``; return ``(params, stats)``.
+
+    A leaf is shardable when its path matches a tensor-parallel rule in
+    ``sharding.rules.PARAM_RULES`` ("T" anywhere in the spec — output-dim
+    sharding of a linear is exact regardless of the rule's orientation,
+    columns being independent), it carries no N padding (interpret-mode
+    alignment), and its true N divides ``mesh.shape[tp]``. MoE expert
+    stacks are never prepared leaves and therefore always replicate —
+    their combine einsum reduces over E, so sharding E would reorder the
+    accumulation and break bitwise parity.
+    """
+    from repro.sharding import rules as R
+
+    size = int(mesh.shape[tp])
+    stats = {"sharded": 0, "replicated": 0}
+
+    def leaf(path, v):
+        if not isinstance(v, PreparedCrossbar):
+            return v
+        p = R._path_str(path)
+        ok = (
+            size > 1
+            and R.serve_tp_shardable(p)
+            and v.g_pos.shape[-1] == v.n
+            and v.n % size == 0
+        )
+        if not ok:
+            stats["replicated"] += 1
+            return v
+        stats["sharded"] += 1
+        n_local = v.n // size
+        local = _prep_like(v, lambda nm, c: c, aux=(v.k, n_local, (n_local,)))
+        return ShardedPrepared(local, v.n, tp)
+
+    out = jax.tree_util.tree_map_with_path(
+        leaf, params, is_leaf=lambda v: isinstance(v, PreparedCrossbar)
+    )
+    return out, stats
+
+
+def serve_param_specs(params):
+    """PartitionSpec tree matching ``params``' treedef: ``ShardedPrepared``
+    wrappers shard their operands' last dim over their axis (lora_a is
+    the K-side factor and replicates); everything else replicates."""
+
+    def leaf(v):
+        if isinstance(v, ShardedPrepared):
+            def spec(nm, c):
+                if nm == "lora_a":
+                    return P()
+                return P(*([None] * (c.ndim - 1) + [v.axis]))
+
+            return ShardedPrepared(
+                _prep_like(v.local, spec), v.n_total, v.axis
+            )
+        if isinstance(v, PreparedCrossbar):
+            return _prep_like(v, lambda nm, c: P())
+        return P()
+
+    return jax.tree_util.tree_map(
+        leaf, params,
+        is_leaf=lambda v: isinstance(v, (ShardedPrepared, PreparedCrossbar)),
+    )
+
+
+def place_serve_params(params, mesh):
+    """device_put the serve params tree onto ``mesh`` per
+    ``serve_param_specs`` (sharded wrappers' operands land distributed,
+    the rest replicated once per device)."""
+    specs = serve_param_specs(params)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+    return jax.device_put(params, shardings)

@@ -1,0 +1,87 @@
+"""Fault-tolerance runtime primitives (runtime/fault.py): the straggler
+policy acts on PERSISTENT outliers (a one-off spike never triggers a
+re-mesh), preemption is a flag flip, and the elastic plan only ever
+shrinks the data axis — the model axis (and with it every param
+sharding) survives degradation unchanged."""
+import numpy as np
+import pytest
+
+from repro.runtime.fault import (
+    ElasticPlan, PreemptionGuard, StragglerDetector, StepTimer,
+)
+
+
+def _feed_baseline(det, n, t=0.10, start=0):
+    for i in range(n):
+        det.record(start + i, t + 1e-4 * (i % 3))  # tiny jitter, no outliers
+    return start + n
+
+
+class TestStragglerDetector:
+    def test_one_off_spike_is_not_persistent(self):
+        det = StragglerDetector(window=64, min_samples=16)
+        step = _feed_baseline(det, 32)
+        r = det.record(step, 1.5)  # single 15x spike
+        assert r is not None and r.is_straggler
+        # flagged once, but the policy signal stays down
+        assert not det.persistent(k=3, horizon=8)
+
+    def test_persistent_outlier_trips_policy(self):
+        det = StragglerDetector(window=64, min_samples=16)
+        step = _feed_baseline(det, 32)
+        for i in range(3):  # thermally-throttled host: every step slow
+            det.record(step + i, 1.5)
+        assert det.persistent(k=3, horizon=8)
+
+    def test_no_reports_before_min_samples(self):
+        det = StragglerDetector(window=64, min_samples=16)
+        for i in range(15):
+            assert det.record(i, 10.0 if i % 2 else 0.1) is None
+        assert det.reports == []
+        assert not det.persistent(k=1, horizon=100)
+
+    def test_recovery_clears_persistence(self):
+        det = StragglerDetector(window=64, min_samples=16)
+        step = _feed_baseline(det, 32)
+        for i in range(4):
+            det.record(step + i, 1.5)
+        assert det.persistent(k=3, horizon=8)
+        _feed_baseline(det, 8, start=step + 4)  # host healthy again
+        assert not det.persistent(k=3, horizon=8)
+
+
+class TestPreemptionGuard:
+    def test_request_stop_flips_flag(self):
+        with PreemptionGuard() as guard:
+            assert not guard.should_stop
+            guard.request_stop()
+            assert guard.should_stop
+
+    def test_fresh_guard_starts_clear(self):
+        with PreemptionGuard() as guard:
+            assert not guard.should_stop
+
+
+class TestElasticPlan:
+    def test_model_axis_unchanged(self):
+        plan = ElasticPlan.plan(3, 120, rows=16, cols=16)
+        assert plan.new_mesh_shape == (13, 16)  # cols untouched
+        assert plan.failed_hosts == 3
+        assert plan.restore_step == 120
+
+    def test_serve_mesh_shapes(self):
+        plan = ElasticPlan.plan(1, 7, rows=2, cols=4)
+        assert plan.new_mesh_shape == (1, 4)
+
+    def test_no_capacity_raises(self):
+        with pytest.raises(RuntimeError):
+            ElasticPlan.plan(16, 0, rows=16, cols=16)
+
+    def test_none_step_restores_at_zero(self):
+        assert ElasticPlan.plan(1, None).restore_step == 0
+
+
+def test_step_timer_measures_elapsed():
+    with StepTimer() as t:
+        x = sum(range(1000))
+    assert t.elapsed >= 0.0 and x == 499500
