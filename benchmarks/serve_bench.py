@@ -1,25 +1,39 @@
 """Continuous-batching serve bench: decode tok/s, time-to-first-token,
-and the retrace counter (compiled computations must stay flat once the
-step registry is warm — the ISSUE 4 regression metric).
+prefix-cache reuse, and the retrace counter (compiled computations must
+stay flat once the step registry is warm — the ISSUE 4 regression
+metric) — swept over EVERY config in the zoo, encoder-decoder and
+vision-prefix lanes included.
 
-Drives ``ServeEngine`` with two waves of ragged, staggered requests per
-backend. Wave 1 warms the per-``(cfg, backend)`` compiled steps; wave 2
-reuses the same prompt shapes, so ANY new compilation it triggers is a
-retrace regression (``recompiles_second_wave`` should be 0).
+Per architecture, the bench drives ``ServeEngine`` with two waves of
+ragged, staggered requests. Wave 1 warms the per-``(cfg, backend)``
+compiled steps; wave 2 reuses the same request shapes, so ANY new
+compilation it triggers is a retrace regression
+(``recompiles_second_wave`` must be 0 — including the encoder and
+vision-prefill lanes, whose admission programs live in the same
+registry). A third phase admits one prompt cold, then resubmits it: the
+resubmission must hit the prefix cache, emit bitwise-identical tokens,
+and land a lower TTFT (the snapshot skips the prompt's prefill).
+
+The primary arch (``--arch``) additionally runs on BOTH substrate
+backends for the codes/dequant decode-ratio gate; the rest of the zoo
+sweeps on the codes backend (the paper's serving path).
 
 On this CPU container the codes backend runs its Pallas kernel in
 interpret mode, so absolute wall-times are not TPU-representative; the
 numbers that track the serving story are the retrace count, TTFT vs
-decode split, the codes/dequant decode ratio, and their trajectory over
-PRs.
+decode split, prefix-hit TTFT vs cold, the codes/dequant decode ratio,
+and their trajectory over PRs.
 
 Regression gates (exit 1):
-  * any backend errors, or recompiles in the second (same-shape) wave,
-  * ``compile_count_warm`` differs between codes and dequant (the
-    registry-key collision bug made codes compile 2x),
-  * codes decode tok/s falls below ``--codes-floor`` x dequant's (the
-    ISSUE 6 fast-path ratchet; the committed BENCH_serve.json shows the
-    ratio at or above 1.0).
+  * any arch/backend errors, or recompiles in a second (same-shape)
+    wave — enc-dec and vision lanes included,
+  * a prefix-cache resubmission that misses, mismatches the cold
+    tokens, or fails to lower TTFT,
+  * ``compile_count_warm`` differs between codes and dequant on the
+    primary arch (the registry-key collision bug made codes compile
+    2x),
+  * primary-arch codes decode tok/s below ``--codes-floor`` x
+    dequant's (the ISSUE 6 fast-path ratchet).
 
 Usage:
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke \
@@ -34,43 +48,99 @@ import statistics
 import jax
 import numpy as np
 
+ZOO = [
+    "qwen3_1_7b", "gemma3_12b", "minitron_8b", "deepseek_coder_33b",
+    "deepseek_v2_lite_16b", "mixtral_8x22b", "falcon_mamba_7b",
+    "recurrentgemma_9b", "seamless_m4t_large_v2", "paligemma_3b",
+]
 
-def bench_backend(arch: str, backend: str, *, quick: bool) -> dict:
+
+def _request_inputs(cfg, seed: int, i: int, plen: int):
+    """Deterministic (prompt, enc_embeds, patch_embeds) for request i —
+    the same seed reproduces the same bytes, which is what lets wave 2
+    reuse wave 1's shapes and the prefix phase re-hash its prompt."""
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+    kp, ke, kv = jax.random.split(k, 3)
+    prompt = np.asarray(jax.random.randint(kp, (plen,), 0, cfg.vocab))
+    enc = None
+    if cfg.encoder_layers:
+        enc = np.asarray(jax.random.normal(
+            ke, (3 + i % 2, cfg.d_model), cfg.dtype
+        ))
+    patches = None
+    if cfg.vision_tokens:
+        patches = np.asarray(jax.random.normal(
+            kv, (cfg.vision_tokens, cfg.d_model), cfg.dtype
+        ))
+    return prompt, enc, patches
+
+
+def bench_arch(arch: str, backend: str, *, quick: bool) -> dict:
     from repro.configs import get_arch
-    from repro.deploy import Deployment, ServeEngine, serving
+    from repro.deploy import Deployment, ServeEngine
 
     cfg = get_arch(arch).smoke if quick else get_arch(arch).full
-    n_requests, max_new, max_slots, max_len = (
-        (4, 6, 2, 32) if quick else (16, 32, 8, 256)
-    )
+    n_requests, max_new, max_slots = (4, 6, 2) if quick else (16, 32, 8)
+    max_len = (48 if quick else 256) + cfg.vision_tokens
+    chunk = 8 if quick else 32
     prompt_lens = [4 + (3 * i) % 9 for i in range(n_requests)]
     session = Deployment.program(cfg, 0, backend=backend).serve()
+    src_len = 4 if cfg.encoder_layers else 0
+
+    def engine():
+        return ServeEngine(
+            session, max_slots=max_slots, max_len=max_len, src_len=src_len,
+            prefill_chunk=chunk, min_bucket=4,
+        )
 
     def wave(seed: int):
-        engine = ServeEngine(session, max_slots=max_slots, max_len=max_len)
+        eng = engine()
         reqs = []
         for i, plen in enumerate(prompt_lens):
-            prompt = np.asarray(jax.random.randint(
-                jax.random.fold_in(jax.random.PRNGKey(seed), i),
-                (plen,), 0, cfg.vocab,
+            prompt, enc, patches = _request_inputs(cfg, seed, i, plen)
+            reqs.append(eng.submit(
+                prompt, max_new=max_new, enc_embeds=enc, patch_embeds=patches
             ))
-            reqs.append(engine.submit(prompt, max_new=max_new))
-            engine.step()  # staggered admission while earlier rows decode
-        engine.run()
-        return engine, reqs
+            eng.step()  # staggered admission while earlier rows decode
+        eng.run()
+        return eng, reqs
 
-    engine1, reqs1 = wave(0)
-    with session.scope():
-        warm = serving.compile_count(cfg)
+    engine1, _ = wave(0)
+    warm = engine1.compile_count()
     engine2, reqs2 = wave(1)
-    with session.scope():
-        after = serving.compile_count(cfg)
+    after = engine2.compile_count()
     stats = engine2.stats()
     ttfts = [r.ttft_seconds for r in reqs2]
+
+    # prefix phase: cold admission, then an exact resubmission — must
+    # hit the snapshot, reproduce the cold tokens bitwise, and beat the
+    # cold TTFT. A throwaway different-token admission first warms any
+    # length-16 program (fused-prefill archs) so the cold TTFT measures
+    # computation, not compilation.
+    eng = engine()
+    pw, ew, vw = _request_inputs(cfg, 8, 0, 16)
+    eng.submit(pw, max_new=2, enc_embeds=ew, patch_embeds=vw)
+    eng.run()
+    prompt, enc, patches = _request_inputs(cfg, 7, 0, 16)
+    cold = eng.submit(
+        prompt, max_new=max_new, enc_embeds=enc, patch_embeds=patches
+    )
+    eng.run()
+    hit = eng.submit(
+        prompt, max_new=max_new, enc_embeds=enc, patch_embeds=patches
+    )
+    eng.run()
+    pstats = eng.stats()
+    prefix_ok = (
+        hit.prefix_hit_tokens == prompt.shape[0]
+        and hit.tokens == cold.tokens
+        and hit.ttft_seconds < cold.ttft_seconds
+    )
     return {
         "requests": n_requests,
         "max_new": max_new,
         "max_slots": max_slots,
+        "prefill_chunk": chunk,
         "ticks": stats["ticks"],
         "decode_tokens": stats["decode_tokens"],
         "decode_seconds": round(stats["decode_seconds"], 4),
@@ -79,6 +149,13 @@ def bench_backend(arch: str, backend: str, *, quick: bool) -> dict:
         "ttft_s_max": round(max(ttfts), 4),
         "compile_count_warm": warm,
         "recompiles_second_wave": after - warm,
+        "ttft_s_prefix_cold": round(cold.ttft_seconds, 4),
+        "ttft_s_prefix_hit": round(hit.ttft_seconds, 4),
+        "prefix_hit_rate": round(
+            (pstats["prefix_hits"] + pstats["prefix_partial_hits"])
+            / max(pstats["prefix_lookups"], 1), 3,
+        ),
+        "prefix_gate_ok": bool(prefix_ok),
     }
 
 
@@ -86,7 +163,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs + request counts (CI lane)")
-    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    help="primary arch: benched on both backends + ratio gate")
+    ap.add_argument("--archs", default=",".join(ZOO),
+                    help="comma list of zoo archs to sweep (codes backend)")
     ap.add_argument("--backends", default="dequant,codes")
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument(
@@ -96,25 +176,38 @@ def main() -> None:
         "BENCH_serve.json is regenerated at >= 1.0)",
     )
     args = ap.parse_args()
+    from repro.configs import get_arch
 
     result = {
         "bench": "serve_engine",
         "arch": args.arch,
         "mode": "smoke" if args.smoke else "full",
         "backends": {},
+        "zoo": {},
     }
-    failures = 0
+    failures = []
     for backend in args.backends.split(","):
         try:
-            result["backends"][backend] = bench_backend(
+            result["backends"][backend] = bench_arch(
                 args.arch, backend, quick=args.smoke
             )
-        except Exception as e:  # keep the suite going; fail at the end
+        except Exception as e:  # keep the sweep going; fail at the end
             result["backends"][backend] = {"error": repr(e)}
-            failures += 1
+            failures.append(f"{args.arch}/{backend}: {e!r}")
+    primary = get_arch(args.arch).name
+    for arch in args.archs.split(","):
+        if get_arch(arch).name == primary:
+            result["zoo"][arch] = {"see": "backends"}
+            continue
+        try:
+            result["zoo"][arch] = bench_arch(arch, "codes", quick=args.smoke)
+        except Exception as e:
+            result["zoo"][arch] = {"error": repr(e)}
+            failures.append(f"{arch}/codes: {e!r}")
+
     backends = result["backends"]
     codes, dequant = backends.get("codes"), backends.get("dequant")
-    gate_msgs = []
+    gate_msgs = list(failures)
     if (
         isinstance(codes, dict) and isinstance(dequant, dict)
         and "decode_tok_per_s" in codes and "decode_tok_per_s" in dequant
@@ -135,17 +228,30 @@ def main() -> None:
                 f"{codes['compile_count_warm']} "
                 f"dequant={dequant['compile_count_warm']}"
             )
+    lanes = dict(backends)
+    lanes.update(
+        (k, v) for k, v in result["zoo"].items() if "see" not in v
+    )
+    for name, b in lanes.items():
+        if not isinstance(b, dict) or "recompiles_second_wave" not in b:
+            continue
+        if b["recompiles_second_wave"] != 0:
+            gate_msgs.append(
+                f"{name}: {b['recompiles_second_wave']} second-wave "
+                "recompiles (retrace regression)"
+            )
+        if not b.get("prefix_gate_ok", False):
+            gate_msgs.append(
+                f"{name}: prefix-cache resubmission failed the "
+                "bitwise/TTFT gate"
+            )
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
         f.write("\n")
     print(json.dumps(result, indent=2, sort_keys=True))
-    retraces = [
-        b.get("recompiles_second_wave") for b in backends.values()
-        if isinstance(b, dict) and "recompiles_second_wave" in b
-    ]
     for msg in gate_msgs:
         print(f"FAIL: {msg}")
-    if failures or any(r != 0 for r in retraces) or gate_msgs:
+    if gate_msgs:
         raise SystemExit(1)
 
 

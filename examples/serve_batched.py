@@ -1,11 +1,17 @@
 """Continuous-batching serving example: program a deployment, calibrate
 it, then serve ragged concurrent requests through ``ServeEngine`` —
-slot-based scheduling over one fixed (max_slots, max_len) cache, fused
+slot-based scheduling over one fixed (max_slots, max_len) cache, chunked
 prefill at admission, one compiled batched decode step for every tick.
+
+The second half demos the shared prefix cache: every request opens with
+the same system prompt, so after the first admission the engine resumes
+each later request from a chunk-boundary snapshot instead of re-running
+the shared tokens — same tokens bitwise, measurably lower TTFT.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 import jax
+import numpy as np
 
 from repro.configs import get_arch
 from repro.deploy import Deployment, ServeEngine
@@ -25,7 +31,7 @@ def main():
     # 8 requests with ragged prompt lengths, admitted while earlier ones
     # are mid-decode — 4 slots, recycled as requests finish. Temperature
     # sampling applies from the FIRST generated token, per-request keys.
-    engine = ServeEngine(session, max_slots=4, max_len=48)
+    engine = ServeEngine(session, max_slots=4, max_len=48, prefill_chunk=8)
     key = jax.random.PRNGKey(0)
     reqs = []
     for i in range(8):
@@ -47,6 +53,28 @@ def main():
         f"{stats['compile_count']} (flat across requests)"
     )
     print("first two continuations:", reqs[0].tokens, reqs[1].tokens)
+
+    # -- shared system prompt -> prefix-cache hits --------------------------
+    # One 16-token "system prompt" opens every request; user turns differ.
+    # Request 0 admits cold and leaves chunk-boundary snapshots behind;
+    # requests 1..5 resume from the shared prefix (partial hits).
+    sys_key, key = jax.random.split(key)
+    system = np.asarray(jax.random.randint(sys_key, (16,), 0, cfg.vocab))
+    chat = ServeEngine(session, max_slots=4, max_len=64, prefill_chunk=8)
+    ttfts = []
+    for i in range(6):
+        uk, key = jax.random.split(key)
+        user = np.asarray(jax.random.randint(uk, (6,), 0, cfg.vocab))
+        req = chat.submit(np.concatenate([system, user]), max_new=8)
+        chat.run()  # drain per request so TTFTs are comparable
+        ttfts.append(req.ttft_seconds)
+    st = chat.stats()
+    print(
+        f"shared system prompt: {st['prefix_partial_hits']} of "
+        f"{st['prefix_lookups']} admissions resumed from the prefix cache; "
+        f"cold TTFT {ttfts[0] * 1e3:.1f} ms -> warm median "
+        f"{sorted(ttfts[1:])[len(ttfts[1:]) // 2] * 1e3:.1f} ms"
+    )
 
 
 if __name__ == "__main__":

@@ -379,28 +379,70 @@ def teacher_features(teacher_base, batch, cfg):
     samples the same features serve every epoch — the per-step teacher
     recompute (≈⅓ of step FLOPs and bytes) is amortized away (§Perf H-9).
 
-    Supported for single-stack decoders (enc-dec/VLM keep the fused path).
-    Returns (L+1, B, S, d): block inputs, plus the final block output.
+    Returns a dict of cached teacher activations:
+
+    - ``"dec"`` — (Ld+1, B, S_tot, d): decoder block inputs plus the final
+      block output. S_tot includes the vision prefix for VLM configs.
+    - ``"enc"`` — (Le+1, B, S_src, d) for enc-dec configs: encoder block
+      inputs plus the final (pre-norm) encoder output.
+    - ``"enc_out"`` — (B, S_src, d): normed encoder output, the cross-
+      attention memory every decoder block (teacher AND student) consumes.
+    - ``"head_in"`` / ``"head_out"`` for untied heads: final-norm output
+      and the teacher logits it produces (the lm_head lives in RRAM, so
+      its side-car is calibrated against cached logits too).
     """
     from repro.models import transformer as T
     import jax.numpy as jnp
 
-    assert not cfg.encoder_layers and not cfg.vision_tokens, (
-        "cached-teacher calibration currently supports single-stack decoders"
-    )
     base = teacher_base
     h = T.L.embed(batch["tokens"], base["embed"],
                   scale_by_sqrt_dim=cfg.embed_scale)
+    mask = None
+    if cfg.vision_tokens and "patch_embeds" in batch:
+        h = jnp.concatenate([batch["patch_embeds"].astype(h.dtype), h], axis=1)
+        mask = T._prefix_mask(h.shape[1], batch["patch_embeds"].shape[1])
     s = h.shape[1]
     positions = jnp.arange(s)[None]
     kinds = cfg.layer_kinds()
     pro, n_groups, epi = cfg.body_layout()
     p = cfg.scan_period
+    out = {}
+
+    enc_out = None
+    if cfg.encoder_layers:
+        src = batch["enc_embeds"].astype(h.dtype)
+        s_src = src.shape[1]
+        enc_mask = jnp.ones((s_src, s_src), bool)
+        enc_pos = jnp.arange(s_src)[None]
+
+        def enc_run(he, tb):
+            return T.block_forward(he, tb, {}, cfg, "attn", "mlp",
+                                   positions=enc_pos, mask=enc_mask)
+
+        if cfg.unroll:
+            enc_feats = [src]
+            he = src
+            for tb in base["encoder"]:
+                he = enc_run(he, tb)
+                enc_feats.append(he)
+            enc_feats = jnp.stack(enc_feats)
+        else:
+            def enc_step(he, tb):
+                o = enc_run(he, tb)
+                return o, o
+
+            he, ys = jax.lax.scan(enc_step, src, base["encoder"])
+            enc_feats = jnp.concatenate([src[None], ys], axis=0)
+        enc_out = T._norm(he, base["enc_norm"], cfg)
+        out["enc"] = enc_feats  # (Le+1, B, S_src, d)
+        out["enc_out"] = enc_out
+
     feats = [h]
 
     def run(h, b, kind):
         mixer, ffn = kind
-        return T.block_forward(h, b, {}, cfg, mixer, ffn, positions=positions)
+        return T.block_forward(h, b, {}, cfg, mixer, ffn,
+                               positions=positions, mask=mask, enc_out=enc_out)
 
     for i in range(pro):
         h = run(h, base["prologue"][i], kinds[i])
@@ -420,16 +462,26 @@ def teacher_features(teacher_base, batch, cfg):
     for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
         h = run(h, base["epilogue"][j], kinds[i])
         feats.append(h)
-    return jnp.stack(feats)  # (L+1, B, S, d)
+    out["dec"] = jnp.stack(feats)  # (Ld+1, B, S_tot, d)
+
+    if not cfg.tie_lm_head:
+        hn = T._norm(h, base["final_norm"], cfg)
+        out["head_in"] = hn
+        out["head_out"] = T.L.linear(hn, base["lm_head"], {}, cfg.adapter)
+    return out
 
 
 def make_cached_calib_loss(cfg):
     """The cached-teacher calibration loss as a standalone function
     ``loss_fn(adapters, student_base, feats, batch)``: each student
-    block sees feats[l] and matches feats[l+1] (per-block MSE, averaged
-    over layers). Shared by the single-chip/vmapped step below and the
-    mesh-parallel fleet path (which needs raw per-chip gradients for the
-    compressed cross-device all-reduce)."""
+    block sees feats["dec"][l] (/ feats["enc"][l]) and matches the
+    cached teacher output at l+1. Mirrors ``feature_calibration_loss``
+    term-for-term — encoder pairs, decoder pairs, and the untied
+    lm_head logits term, averaged over ``n_terms`` — so cached and
+    fused calibration follow the same trajectory. Shared by the
+    single-chip/vmapped step below and the mesh-parallel fleet path
+    (which needs raw per-chip gradients for the compressed cross-device
+    all-reduce)."""
     from repro.models import transformer as T
     import jax.numpy as jnp
 
@@ -438,24 +490,68 @@ def make_cached_calib_loss(cfg):
     p = cfg.scan_period
 
     def loss_fn(adapters, sbase, feats, batch):
-        s = feats.shape[2]
+        dec = feats["dec"]
+        s = dec.shape[2]
         positions = jnp.arange(s)[None]
+        mask = None
+        if cfg.vision_tokens and "patch_embeds" in batch:
+            mask = T._prefix_mask(s, batch["patch_embeds"].shape[1])
         loss = jnp.zeros((), jnp.float32)
+        n_terms = 0
+        enc_out = feats.get("enc_out")
+
+        if cfg.encoder_layers:
+            enc = feats["enc"]
+            s_src = enc.shape[2]
+            enc_mask = jnp.ones((s_src, s_src), bool)
+            enc_pos = jnp.arange(s_src)[None]
+
+            if cfg.unroll:
+                for l, (sb, a_) in enumerate(
+                    zip(sbase["encoder"], adapters.get("encoder"))
+                ):
+                    s_out = T.block_forward(
+                        enc[l], sb, a_, cfg, "attn", "mlp",
+                        positions=enc_pos, mask=enc_mask,
+                    )
+                    loss = loss + T._mse(enc[l + 1], s_out)
+            else:
+                def enc_pair(carry, xs):
+                    acc, idx = carry
+                    sb, a_ = xs
+                    fin = jax.lax.dynamic_index_in_dim(
+                        enc, idx, keepdims=False
+                    )
+                    fout = jax.lax.dynamic_index_in_dim(
+                        enc, idx + 1, keepdims=False
+                    )
+                    s_out = T.block_forward(
+                        fin, sb, a_, cfg, "attn", "mlp",
+                        positions=enc_pos, mask=enc_mask,
+                    )
+                    return (acc + T._mse(fout, s_out), idx + 1), None
+
+                (loss, _), _ = jax.lax.scan(
+                    enc_pair, (loss, 0),
+                    (sbase["encoder"], adapters.get("encoder")),
+                )
+            n_terms += cfg.encoder_layers
 
         def pair(l, b, a_, kind):
             mixer, ffn = kind
             s_out = T.block_forward(
-                feats[l], b, a_, cfg, mixer, ffn, positions=positions
+                dec[l], b, a_, cfg, mixer, ffn, positions=positions,
+                mask=mask, enc_out=enc_out,
             )
-            d = (feats[l + 1] - s_out).astype(jnp.float32)
-            return jnp.mean(d * d)
+            return T._mse(dec[l + 1], s_out)
 
         for i in range(pro):
             loss += pair(i, sbase["prologue"][i], adapters["prologue"][i],
                          kinds[i])
+            n_terms += 1
         if n_groups:
             body_kinds = [kinds[pro + j] for j in range(p)]
-            body_feats = feats[pro:pro + n_groups * p + 1]
+            body_feats = dec[pro:pro + n_groups * p + 1]
 
             def group(carry, xs):
                 acc, idx = carry
@@ -470,22 +566,31 @@ def make_cached_calib_loss(cfg):
                     )
                     s_out = T.block_forward(
                         fin, bs[j], as_[j], cfg, mixer, ffn,
-                        positions=positions,
+                        positions=positions, mask=mask, enc_out=enc_out,
                     )
-                    d = (fout - s_out).astype(jnp.float32)
-                    acc = acc + jnp.mean(d * d)
+                    acc = acc + T._mse(fout, s_out)
                 return (acc, idx + 1), None
 
             (loss, _), _ = jax.lax.scan(
                 group, (loss, 0),
                 (sbase["body"], adapters.get("body")),
             )
+            n_terms += n_groups * p
         for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
             loss += pair(
                 pro + n_groups * p + j, sbase["epilogue"][j],
                 adapters["epilogue"][j], kinds[i],
             )
-        return loss / cfg.n_layers
+            n_terms += 1
+
+        if not cfg.tie_lm_head:
+            s_logits = T.L.linear(
+                feats["head_in"], sbase["lm_head"],
+                adapters.get("lm_head"), cfg.adapter,
+            )
+            loss = loss + T._mse(feats["head_out"], s_logits)
+            n_terms += 1
+        return loss / n_terms
 
     return loss_fn
 

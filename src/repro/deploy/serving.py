@@ -139,7 +139,9 @@ def prefill_fn(cfg, mesh: Optional[Mesh] = None, params=None):
         return _registry_get(
             "prefill", cfg,
             lambda: jax.jit(
-                lambda p, t, max_len, e=None: T.prefill(p, t, cfg, max_len, e),
+                lambda p, t, max_len, e=None, pe=None: T.prefill(
+                    p, t, cfg, max_len, e, pe
+                ),
                 static_argnums=(2,),
             ),
         )
@@ -149,9 +151,11 @@ def prefill_fn(cfg, mesh: Optional[Mesh] = None, params=None):
     def build():
         specs = substrate.serve_param_specs(params)
 
-        def fn(p, t, max_len, e=None):
-            if e is not None:
-                raise ValueError("mesh serving is decoder-only (no enc_embeds)")
+        def fn(p, t, max_len, e=None, pe=None):
+            if e is not None or pe is not None:
+                raise ValueError(
+                    "mesh serving is decoder-only (no enc_embeds/patch_embeds)"
+                )
             sm = shard_map(
                 lambda p, t: T.prefill(p, t, cfg, max_len, None),
                 mesh=mesh,
@@ -166,13 +170,88 @@ def prefill_fn(cfg, mesh: Optional[Mesh] = None, params=None):
     return _registry_get("prefill", cfg, build, mesh=mesh)
 
 
+def prefill_chunk_fn(cfg, mesh: Optional[Mesh] = None, params=None):
+    """The jitted chunked-prefill step for ``(cfg, active backend,
+    mesh)``: advance a live decode cache by one bucketed prompt chunk at
+    per-slot positions. ``max_len``/``prefix`` are static; the chunk
+    bucket width varies through jit's argument cache, which the engine
+    bounds to a pow-2 set."""
+    from repro.models import transformer as T
+
+    if mesh is None:
+        return _registry_get(
+            "prefill_chunk", cfg,
+            lambda: jax.jit(
+                lambda p, t, c, pos0, nv, max_len, prefix=0: T.prefill_chunk(
+                    p, t, c, pos0, nv, cfg, max_len, prefix
+                ),
+                static_argnums=(5, 6),
+            ),
+        )
+    if params is None:
+        raise ValueError("mesh chunk steps derive in_specs from params")
+
+    def build():
+        specs = substrate.serve_param_specs(params)
+
+        def fn(p, t, c, pos0, nv, max_len, prefix=0):
+            sm = shard_map(
+                lambda p, t, c, pos0, nv: T.prefill_chunk(
+                    p, t, c, pos0, nv, cfg, max_len, prefix
+                ),
+                mesh=mesh,
+                in_specs=(specs, P(), P(), P(), P()),
+                out_specs=(P(), P()),
+                check_rep=False,
+            )
+            return sm(p, t, c, pos0, nv)
+
+        return jax.jit(fn, static_argnums=(5, 6))
+
+    return _registry_get("prefill_chunk", cfg, build, mesh=mesh)
+
+
+def prefill_vision_fn(cfg, mesh: Optional[Mesh] = None):
+    """The jitted vision-prefix admission step: scatter
+    ``cfg.vision_tokens`` bidirectional patch positions into a fresh slot
+    cache. One static shape per config — compiles exactly once."""
+    from repro.models import transformer as T
+
+    if mesh is not None:
+        raise ValueError("mesh serving has no vision-prefix path")
+    return _registry_get(
+        "prefill_vision", cfg,
+        lambda: jax.jit(
+            lambda p, pe, c, max_len: T.prefill_vision(p, pe, c, cfg, max_len),
+            static_argnums=(3,),
+        ),
+    )
+
+
+def encode_fn(cfg, mesh: Optional[Mesh] = None):
+    """The jitted encoder admission step: run the (bidirectional) encoder
+    once and scatter every decoder layer's cross-attention K/V lines +
+    ``enc_len`` into a slot cache."""
+    from repro.models import transformer as T
+
+    if mesh is not None:
+        raise ValueError("mesh serving is decoder-only (no encoder)")
+    return _registry_get(
+        "encode", cfg,
+        lambda: jax.jit(lambda p, c, e: T.encode_into_cache(p, c, e, cfg)),
+    )
+
+
+STEP_KINDS = ("decode", "prefill", "prefill_chunk", "prefill_vision", "encode")
+
+
 def compile_count(cfg, mesh: Optional[Mesh] = None) -> int:
     """Total compiled-computation count across this (cfg, backend,
     mesh)'s step functions. Flat across repeated same-shape requests —
     the regression tests and ``benchmarks/serve_bench.py`` track it as
     the retrace counter."""
     total = 0
-    for kind in ("decode", "prefill"):
+    for kind in STEP_KINDS:
         fn = _STEP_REGISTRY.get(
             (kind, cfg, substrate.active_backend_key(), mesh)
         )
@@ -186,7 +265,7 @@ def compile_count(cfg, mesh: Optional[Mesh] = None) -> int:
 
 def prefill_and_cache(
     params, tokens, cfg, max_len: int, enc_embeds=None,
-    mesh: Optional[Mesh] = None,
+    mesh: Optional[Mesh] = None, patch_embeds=None,
 ):
     """Fused prefill: ONE full-sequence forward computes every layer's
     K/V (MLA latents, recurrent states) batched over the prompt and
@@ -196,7 +275,9 @@ def prefill_and_cache(
     is pinned in tests/test_engine.py."""
     if cfg.encoder_layers and enc_embeds is None:
         raise ValueError("encoder-decoder config needs enc_embeds")
-    return prefill_fn(cfg, mesh, params)(params, tokens, int(max_len), enc_embeds)
+    return prefill_fn(cfg, mesh, params)(
+        params, tokens, int(max_len), enc_embeds, patch_embeds
+    )
 
 
 def _next_token(logits, temperature: float, key):
@@ -225,28 +306,32 @@ def _check_sampling_args(temperature: float, key) -> None:
 
 def generate(
     params, prompt: jax.Array, cfg, *, gen_len: int = 16,
-    temperature: float = 0.0, enc_embeds=None, key=None,
+    temperature: float = 0.0, enc_embeds=None, patch_embeds=None, key=None,
 ) -> Tuple[np.ndarray, float]:
     """Reference single-stream generation loop: fused prefill, then
     ``gen_len - 1`` decode steps (the first token comes from the prefill
     logits). Returns ``(tokens (B, gen_len), dt)`` where ``dt`` covers
     exactly those decode steps — so decode tok/s is
     ``B * (gen_len - 1) / dt``, with no prefill-sampled token smuggled
-    into a decode-only timer. The continuous-batching path is
-    ``repro.deploy.engine.ServeEngine``."""
+    into a decode-only timer. ``patch_embeds`` prepends a prefix-LM
+    vision prefix; the decode clock then starts at ``P + S``. The
+    continuous-batching path is ``repro.deploy.engine.ServeEngine``."""
     _check_sampling_args(temperature, key)
     if gen_len < 1:
         raise ValueError(f"gen_len must be >= 1, got {gen_len}")
     b, s = prompt.shape
-    max_len = s + gen_len
-    logits, cache = prefill_and_cache(params, prompt, cfg, max_len, enc_embeds)
+    prefix = 0 if patch_embeds is None else patch_embeds.shape[1]
+    max_len = prefix + s + gen_len
+    logits, cache = prefill_and_cache(
+        params, prompt, cfg, max_len, enc_embeds, patch_embeds=patch_embeds
+    )
     step = decode_step_fn(cfg)
     tok, key = _next_token(logits, temperature, key)
     out = [np.asarray(tok)]
     t0 = time.perf_counter()
     for i in range(gen_len - 1):
         logits, cache = step(
-            params, cache, tok, jnp.full((b,), s + i, jnp.int32)
+            params, cache, tok, jnp.full((b,), prefix + s + i, jnp.int32)
         )
         tok, key = _next_token(logits, temperature, key)
         out.append(np.asarray(tok))
@@ -334,39 +419,42 @@ class ServeSession:
         _check_sampling_args(temperature, key)
         return key
 
-    def prefill(self, tokens, max_len: int, enc_embeds=None):
+    def prefill(self, tokens, max_len: int, enc_embeds=None, patch_embeds=None):
         with self.scope():
             return prefill_and_cache(
                 self.params, tokens, self.cfg, max_len, enc_embeds,
-                mesh=self.mesh,
+                mesh=self.mesh, patch_embeds=patch_embeds,
             )
 
     def generate(
         self, prompt, *, gen_len: int = 16, temperature: float = 0.0,
-        enc_embeds=None, key=None,
+        enc_embeds=None, patch_embeds=None, key=None,
     ) -> Tuple[np.ndarray, float]:
         """Single-call generation: each prompt row becomes one request on
         a throwaway continuous-batching engine (all admitted at tick 0),
         so this shares the compiled steps and slot bookkeeping with the
-        production serving path. Encoder-decoder configs fall back to the
-        reference loop (the engine is decoder-only)."""
+        production serving path — including encoder-decoder requests
+        (per-slot cross-attention cache lines) and vision-prefix requests
+        (``patch_embeds`` (B, P, d))."""
         key = self._sampling_key(temperature, key)
-        if self.cfg.encoder_layers:
-            if self.mesh is not None:
-                raise ValueError("mesh serving is decoder-only")
-            with self.scope():
-                return generate(
-                    self.params, prompt, self.cfg, gen_len=gen_len,
-                    temperature=temperature, enc_embeds=enc_embeds, key=key,
-                )
+        if self.mesh is not None and (
+            enc_embeds is not None or patch_embeds is not None
+        ):
+            raise ValueError("mesh serving is decoder-only")
         from repro.deploy.engine import ServeEngine
 
         b, s = prompt.shape
-        engine = ServeEngine(self, max_slots=b, max_len=s + gen_len)
+        prefix = 0 if patch_embeds is None else patch_embeds.shape[1]
+        src_len = 0 if enc_embeds is None else enc_embeds.shape[1]
+        engine = ServeEngine(
+            self, max_slots=b, max_len=prefix + s + gen_len, src_len=src_len
+        )
         reqs = [
             engine.submit(
                 prompt[i], max_new=gen_len, temperature=temperature,
                 key=None if key is None else jax.random.fold_in(key, i),
+                enc_embeds=None if enc_embeds is None else enc_embeds[i],
+                patch_embeds=None if patch_embeds is None else patch_embeds[i],
             )
             for i in range(b)
         ]

@@ -640,17 +640,14 @@ class Fleet:
         chips = self._chip_list(chips)
         idx = jnp.asarray(chips, jnp.int32)
         batch = calibration_batch(cfg, batch_or_samples, seq_len)
-        cacheable = not cfg.encoder_layers and not cfg.vision_tokens
-        use_cached = cacheable if cached_teacher is None else (
-            cached_teacher and cacheable
-        )
+        use_cached = True if cached_teacher is None else bool(cached_teacher)
         if grad_compress and mesh is None:
             raise ValueError("grad_compress needs a mesh to reduce across")
         if mesh is not None:
             if not use_cached:
                 raise ValueError(
                     "mesh fleet calibration runs the cached-teacher path; "
-                    "this config (or cached_teacher=False) is not cacheable"
+                    "pass cached_teacher=True (or leave it unset)"
                 )
             n_dev = int(mesh.shape["data"])
             if len(chips) % n_dev:

@@ -106,10 +106,10 @@ def main():
     session = dep.serve(mesh=mesh)
     print(session.describe())
 
-    # independent streams for the prompt tokens and the encoder embeds —
-    # reusing one key correlated the two draws
+    # independent streams for the prompt tokens and the encoder/vision
+    # embeds — reusing one key correlated the draws
     key = jax.random.PRNGKey(args.seed)
-    prompt_key, enc_key = jax.random.split(key)
+    prompt_key, enc_key, patch_key = jax.random.split(key, 3)
     prompt = jax.random.randint(
         prompt_key, (args.batch, args.prompt_len), 0, cfg.vocab
     )
@@ -118,8 +118,15 @@ def main():
         enc = jax.random.normal(
             enc_key, (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16
         )
+    patches = None
+    if cfg.vision_tokens:
+        patches = jax.random.normal(
+            patch_key, (args.batch, cfg.vision_tokens, cfg.d_model),
+            jnp.bfloat16,
+        )
     toks, dt = session.generate(
-        prompt, gen_len=args.gen, temperature=args.temperature, enc_embeds=enc,
+        prompt, gen_len=args.gen, temperature=args.temperature,
+        enc_embeds=enc, patch_embeds=patches,
     )
     # dt times exactly the decode steps; the first token per stream comes
     # from prefill, so decode tok/s counts gen - 1 tokens per stream

@@ -15,6 +15,7 @@ config; the step function is identical (it is the one the dry-run lowers).
 from __future__ import annotations
 
 import argparse
+import hashlib
 from typing import Dict, Optional
 
 import jax
@@ -79,9 +80,7 @@ def train(
     arch = get_arch(arch_name)
     cfg = arch.smoke if smoke else arch.full
     opt = AdamW(lr=lr)
-    use_cached = (
-        cached_teacher and not cfg.encoder_layers and not cfg.vision_tokens
-    )
+    use_cached = bool(cached_teacher)
     if use_cached:
         from repro.core.calibrate import make_cached_calib_step, teacher_features
         step_fn = make_cached_calib_step(cfg, opt)
@@ -152,10 +151,16 @@ def train(
             with StepTimer() as t:
                 if use_cached:
                     # distinct calibration batches repeat (10-sample set):
-                    # teacher features computed once per batch identity
-                    bkey = step % max(
-                        1, dcfg.n_calibration_samples // dcfg.global_batch
-                    ) if dcfg.n_calibration_samples else step
+                    # features keyed on batch CONTENT — tokens plus, for
+                    # enc-dec/VLM configs, the encoder inputs / vision
+                    # prefix — so a repeated batch reuses its trace and a
+                    # changed encoder input can never alias a stale one
+                    bkey = hashlib.sha1(
+                        b"".join(
+                            np.ascontiguousarray(np_batch[k]).tobytes()
+                            for k in sorted(np_batch)
+                        )
+                    ).hexdigest()
                     if bkey not in feats_cache:
                         feats_cache[bkey] = teacher_features(
                             state.teacher_base, batch_dev, cfg

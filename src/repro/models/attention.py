@@ -305,6 +305,76 @@ def _mla_attention(
 
 
 # ---------------------------------------------------------------------------
+# cross-attention cache (encoder-decoder serving)
+# ---------------------------------------------------------------------------
+#
+# Encoder K/V never change after admission: they are projections of the
+# (frozen) encoder output. The serving cache therefore stores them once
+# per decoder layer ("xk"/"xv", post-qk-norm, no rope — exactly what
+# ``attention(kv_input=...)`` computes inline) and masks the padded
+# source tail per slot by ``enc_len``. Masked logits hit NEG_INF ->
+# exp() == 0.0 exactly in the f32 softmax sum, so a padded buffer is
+# bitwise the exact-length inline computation.
+
+
+def init_cross_cache(
+    batch: int, src_len: int, cfg: AttentionConfig, dtype=jnp.bfloat16
+) -> Dict:
+    """Per-layer encoder K/V lines for one decoder layer."""
+    shape = (batch, src_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"xk": jnp.zeros(shape, dtype), "xv": jnp.zeros(shape, dtype)}
+
+
+def cross_kv(
+    enc_out: jax.Array,  # (B, S_src, d)
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: AttentionConfig,
+    acfg: AdapterConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """The cacheable half of cross-attention: K/V over the encoder
+    output, identical to what ``attention(kv_input=enc_out)`` computes
+    (post-norm, never roped). Cross trees keep per-leaf projections (no
+    fused "_qkv" leaf), so the projections are addressed directly."""
+    a = adapters or {}
+    b_, t, _ = enc_out.shape
+    k = L.linear(enc_out, base["k"], a.get("k"), acfg)
+    v = L.linear(enc_out, base["v"], a.get("v"), acfg)
+    k = k.reshape(b_, t, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b_, t, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = L.rms_norm(k, base["k_norm"])
+    return k, v
+
+
+def cross_attention_cached(
+    x: jax.Array,  # (B, S, d) — decode (S=1) or a prefill chunk
+    cache: Dict,   # layer cache holding "xk"/"xv" (B, T_src, kvh, hd)
+    enc_len: jax.Array,  # (B,) int32 valid source length per slot
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: AttentionConfig,
+    acfg: AdapterConfig,
+) -> jax.Array:
+    """Cross-attention against cached encoder K/V, masked per slot by
+    ``enc_len``. Bitwise the inline ``attention(kv_input=enc_out)`` for
+    the valid source positions (padded tail softmaxes to exact zero)."""
+    a = adapters or {}
+    b_, s, _ = x.shape
+    q = L.linear(x, base["q"], a.get("q"), acfg)
+    q = q.reshape(b_, s, cfg.num_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, base["q_norm"])
+    t = cache["xk"].shape[1]
+    valid = jnp.arange(t)[None, :] < enc_len[:, None]  # (B, T_src)
+    out = _sdpa(
+        q, cache["xk"], cache["xv"], cfg.scale,
+        valid[:, None, None, None, :],
+    )
+    return L.linear(out.reshape(b_, s, -1), base["o"], a.get("o"), acfg)
+
+
+# ---------------------------------------------------------------------------
 # decode path with KV cache
 # ---------------------------------------------------------------------------
 
@@ -441,4 +511,132 @@ def _mla_decode(x, cache, pos, positions, base, a, cfg: AttentionConfig, acfg):
     valid = _cache_mask(pos, t, cfg.window)  # (B, T)
     out = _sdpa(q_full, k_full, v, cfg.scale, valid[:, None, None, None, :])
     y = L.linear(out.reshape(b_, 1, -1), base["o"], a.get("o"), acfg)
+    return y, {"c_kv": c_buf, "k_rope": r_buf}
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (advance a decode cache by a whole prompt chunk)
+# ---------------------------------------------------------------------------
+#
+# ``chunk_attention`` is the C-token generalisation of
+# ``decode_attention``: scatter the chunk's K/V into the live cache at
+# absolute positions, attend each chunk query against everything
+# written so far. Because every projection/rope/softmax is row- and
+# position-independent and masked tails softmax to exact zero, a prompt
+# processed chunk-by-chunk is bitwise the fused ``prefill`` — pinned in
+# tests/test_engine.py.
+#
+# Rolling (sliding-window) caches need care when a chunk is longer than
+# the window: a later in-chunk position would overwrite the wrapped slot
+# an earlier query still reads. So windowed layers attend on a gathered
+# absolute-position *canvas* (size max_len) and gather the freshest
+# residue per slot back into the rolling buffer afterwards.
+
+
+def chunk_attention(
+    x: jax.Array,  # (B, C, d) — embedded chunk, padded tail allowed
+    cache: Dict,
+    pos0: jax.Array,  # (B,) absolute position of the chunk's first token
+    n_valid: jax.Array,  # (B,) real tokens in this chunk (rest is padding)
+    base: Dict,
+    adapters: Optional[Dict],
+    cfg: AttentionConfig,
+    acfg: AdapterConfig,
+    *,
+    max_len: int,
+    prefix: int = 0,  # prefix-LM boundary (vision tokens attend bidir)
+) -> Tuple[jax.Array, Dict]:
+    a = adapters or {}
+    b_, c, _ = x.shape
+    pos0 = _as_pos_vector(pos0, b_)
+    n_valid = _as_pos_vector(n_valid, b_)
+    i = jnp.arange(c)[None, :]
+    positions = pos0[:, None] + i  # (B, C) absolute positions
+    if cfg.mla:
+        return _mla_chunk(
+            x, cache, positions, i, n_valid, base, a, cfg, acfg, prefix
+        )
+    q, k, v = _qkv_proj(x, x, base, a, cfg, acfg)
+    q = q.reshape(b_, c, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b_, c, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b_, c, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, base["q_norm"])
+        k = L.rms_norm(k, base["k_norm"])
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    rows = jnp.arange(b_)[:, None]
+    length = cache["k"].shape[1]
+    rolling = length < max_len
+    # Padded tail rows scatter out of range -> dropped.
+    drop_to = max_len if rolling else length
+    wpos = jnp.where(i < n_valid[:, None], positions, drop_to)
+    t = max_len if rolling else length
+    j = jnp.arange(t)[None, None, :]
+    allow = j <= positions[:, :, None]  # (B, C, T)
+    if cfg.window is not None:
+        allow = allow & (j > positions[:, :, None] - cfg.window)
+    if prefix:
+        if rolling:
+            raise ValueError("prefix-LM chunks need a non-rolling cache")
+        allow = allow | (j < prefix)
+    if not rolling:
+        k_buf = cache["k"].at[rows, wpos].set(k, mode="drop")
+        v_buf = cache["v"].at[rows, wpos].set(v, mode="drop")
+        out = _sdpa(q, k_buf, v_buf, cfg.scale, allow[:, None, None])
+        new = {"k": k_buf, "v": v_buf}
+    else:
+        # Absolute canvas: slot j holds the rolling residue of j.
+        jj = jnp.arange(max_len)
+        k_can = cache["k"][:, jj % length].at[rows, wpos].set(k, mode="drop")
+        v_can = cache["v"][:, jj % length].at[rows, wpos].set(v, mode="drop")
+        out = _sdpa(q, k_can, v_can, cfg.scale, allow[:, None, None])
+        # Gather the freshest written position per residue class back.
+        # Slots this chunk never reached keep their old value (src walks
+        # back to the previous occupant); slots ahead of the clock clip
+        # to an arbitrary canvas entry — they stay masked until the
+        # row's clock wraps, by which point they are genuinely written.
+        pos_max = pos0 + n_valid - 1  # (B,)
+        m = jnp.arange(length)[None, :]
+        src = pos_max[:, None] - ((pos_max[:, None] - m) % length)
+        src = jnp.clip(src, 0, max_len - 1)
+        new = {"k": k_can[rows, src], "v": v_can[rows, src]}
+    y = L.linear(out.reshape(b_, c, -1), base["o"], a.get("o"), acfg)
+    return y, new
+
+
+def _mla_chunk(x, cache, positions, i, n_valid, base, a, cfg, acfg, prefix):
+    """Chunk step for MLA caches: scatter the post-norm latent + shared
+    rope key at absolute positions, then up-project the full buffer like
+    ``_mla_decode``. MLA layers are never windowed here (deepseek-v2 is
+    global), so the latent buffer is always full-length."""
+    b_, c, _ = x.shape
+    length = cache["c_kv"].shape[1]
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    q, kv = _mla_q_kv_proj(x, base, a, cfg, acfg)
+    q = q.reshape(b_, c, cfg.num_heads, qk_head)
+    q_nope = q[..., : cfg.qk_nope_head_dim]
+    q_rope = L.apply_rope(q[..., cfg.qk_nope_head_dim :], positions, cfg.rope_theta)
+    c_kv = L.rms_norm(kv[..., : cfg.kv_lora_rank], base["kv_norm"])
+    k_rope_new = L.apply_rope(
+        kv[..., None, cfg.kv_lora_rank :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+    rows = jnp.arange(b_)[:, None]
+    wpos = jnp.where(i < n_valid[:, None], positions, length)
+    c_buf = cache["c_kv"].at[rows, wpos].set(c_kv, mode="drop")
+    r_buf = cache["k_rope"].at[rows, wpos].set(k_rope_new, mode="drop")
+    k_nope, v = _mla_up_proj(c_buf, base, a, cfg, acfg)
+    k_nope = k_nope.reshape(b_, length, cfg.num_heads, cfg.qk_nope_head_dim)
+    v = v.reshape(b_, length, cfg.num_heads, cfg.v_head_dim)
+    k_rope_b = jnp.broadcast_to(
+        r_buf[:, :, None, :], (b_, length, cfg.num_heads, cfg.qk_rope_head_dim)
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    j = jnp.arange(length)[None, None, :]
+    allow = j <= positions[:, :, None]
+    if prefix:
+        allow = allow | (j < prefix)
+    out = _sdpa(q_full, k_full, v, cfg.scale, allow[:, None, None])
+    y = L.linear(out.reshape(b_, c, -1), base["o"], a.get("o"), acfg)
     return y, {"c_kv": c_buf, "k_rope": r_buf}

@@ -532,12 +532,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> 
 
     def layer_cache(mixer):
         if mixer in ("attn", "local", "swa"):
-            return A.init_kv_cache(batch, max_len, _attn_cfg(cfg, mixer), cfg.dtype)
-        if mixer == "ssm":
-            return S.init_ssm_cache(batch, cfg.ssm)
-        if mixer == "rglru":
-            return R.init_rglru_cache(batch, cfg.rglru)
-        raise ValueError(mixer)
+            c = A.init_kv_cache(batch, max_len, _attn_cfg(cfg, mixer), cfg.dtype)
+        elif mixer == "ssm":
+            c = S.init_ssm_cache(batch, cfg.ssm)
+        elif mixer == "rglru":
+            c = R.init_rglru_cache(batch, cfg.rglru)
+        else:
+            raise ValueError(mixer)
+        if cfg.encoder_layers:
+            # Per-layer cross-attention lines: encoder K/V computed once
+            # at admission (encode_into_cache / prefill) and reused by
+            # every decode tick, masked per slot by cache["enc_len"].
+            c = dict(c)
+            c.update(A.init_cross_cache(
+                batch, max(src_len, 1), _attn_cfg(cfg, "attn", cross=True),
+                cfg.dtype,
+            ))
+        return c
 
     cache: Dict = {"prologue": [layer_cache(kinds[i][0]) for i in range(pro)]}
     if n_groups:
@@ -549,10 +560,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> 
         layer_cache(kinds[i][0]) for i in range(cfg.n_layers - epi, cfg.n_layers)
     ]
     if cfg.encoder_layers:
-        # Encoder output cached once at prefill; cross-attention K/V are
-        # recomputed from it per layer inside the step (small relative to
-        # the decode matmuls; folding K/V into the cache is a hillclimb).
-        cache["enc_out"] = jnp.zeros((batch, max(src_len, 1), cfg.d_model), cfg.dtype)
+        cache["enc_len"] = jnp.zeros((batch,), jnp.int32)
     return cache
 
 
@@ -575,20 +583,67 @@ def write_cache_slot(cache: Dict, one: Dict, slot: int) -> Dict:
     return new
 
 
+def encode_into_cache(params: Dict, cache: Dict, enc_embeds, cfg: ModelConfig) -> Dict:
+    """Run the encoder once and scatter each decoder layer's
+    cross-attention K/V ("xk"/"xv") plus the per-slot valid source length
+    ("enc_len") into a decode cache. The cache keeps a padded source
+    extent; positions past ``enc_len`` are masked to exact softmax zero,
+    so ragged encoder inputs across slots stay bitwise the exact-length
+    computation."""
+    base, adapters = params["base"], params["adapters"]
+    if not adapters:
+        adapters = _empty_adapters(base)
+    enc_out = encode(base, adapters, enc_embeds.astype(cfg.dtype), cfg)
+    s_src = enc_out.shape[1]
+    xcfg = _attn_cfg(cfg, "attn", cross=True)
+
+    def fill(cache_l, b, a_):
+        k, v = A.cross_kv(enc_out, b["xattn"], (a_ or {}).get("xattn"), xcfg,
+                          cfg.adapter)
+        new = dict(cache_l)
+        new["xk"] = cache_l["xk"].at[:, :s_src].set(k.astype(cache_l["xk"].dtype))
+        new["xv"] = cache_l["xv"].at[:, :s_src].set(v.astype(cache_l["xv"].dtype))
+        return new
+
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    new_cache = dict(cache)
+    new_cache["prologue"] = [
+        fill(cache["prologue"][i], base["prologue"][i], adapters["prologue"][i])
+        for i in range(pro)
+    ]
+    if n_groups:
+        def group(_, xs):
+            cs, bs, as_ = xs
+            return None, [fill(cs[j], bs[j], as_[j]) for j in range(p)]
+
+        _, body = jax.lax.scan(
+            group, None, (cache["body"], base["body"], adapters.get("body"))
+        )
+        new_cache["body"] = body
+    new_cache["epilogue"] = [
+        fill(cache["epilogue"][j], base["epilogue"][j], adapters["epilogue"][j])
+        for j in range(epi)
+    ]
+    new_cache["enc_len"] = jnp.full_like(cache["enc_len"], s_src)
+    return new_cache
+
+
 def _prefill_block(
     h, b, a_, cfg: ModelConfig, mixer: str, ffn: str, *,
-    positions, max_len: int, enc_out=None,
+    positions, max_len: int, enc_out=None, mask=None,
 ):
     """``block_forward`` that also emits the layer's decode cache: K/V
     (post-rope) scattered at positions [0, s), MLA latents, or the
-    recurrent state + conv window after the last position."""
+    recurrent state + conv window after the last position. Encoder-decoder
+    layers additionally emit their cross-attention K/V lines."""
     a_ = a_ or {}
     x = _norm(h, b["norm1"], cfg)
     if mixer in ("attn", "local", "swa"):
         acfg = _attn_cfg(cfg, mixer)
         mix, kv = A.attention(
             x, b["mixer"], a_.get("mixer"), acfg, cfg.adapter,
-            positions=positions, return_kv=True,
+            positions=positions, mask=mask, return_kv=True,
         )
         layer_cache = A.prefill_kv_cache(
             kv, h.shape[0], max_len, acfg, cfg.dtype
@@ -608,10 +663,15 @@ def _prefill_block(
     h = h + mix
     if "xattn" in b and enc_out is not None:
         x = _norm(h, b["norm_x"], cfg)
-        h = h + A.attention(
+        xa, xkv = A.attention(
             x, b["xattn"], a_.get("xattn"),
             _attn_cfg(cfg, "attn", cross=True), cfg.adapter, kv_input=enc_out,
+            return_kv=True,
         )
+        h = h + xa
+        layer_cache = dict(layer_cache)
+        layer_cache["xk"] = xkv["k"].astype(cfg.dtype)
+        layer_cache["xv"] = xkv["v"].astype(cfg.dtype)
     if ffn in ("mlp", "moe"):
         x = _norm(h, b["norm2"], cfg)
         if ffn == "mlp":
@@ -627,33 +687,44 @@ def prefill(
     cfg: ModelConfig,
     max_len: int,
     enc_embeds: Optional[jax.Array] = None,
+    patch_embeds: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Fused full-sequence prefill: ONE forward pass over the whole
     prompt that returns the last-position logits ``(B, 1, vocab)`` and a
     decode cache ready for ``decode_step`` at ``pos = S`` — K/V (and MLA
     latents / recurrent states) are computed batched over the sequence
     and scattered into each buffer, instead of S per-token decode steps
-    (the old serving loop). Parity: tests/test_engine.py."""
+    (the old serving loop). Parity: tests/test_engine.py.
+
+    ``patch_embeds`` (B, P, d) prepends a bidirectional prefix-LM vision
+    prefix (paligemma): positions 0..P-1 are patches, the decode clock
+    then starts at ``P + S``. Encoder-decoder configs emit per-layer
+    cross-attention K/V lines plus ``enc_len``."""
     base, adapters = params["base"], params["adapters"]
     if not adapters:
         adapters = _empty_adapters(base)
     b, s = tokens.shape
     h = L.embed(tokens, base["embed"], scale_by_sqrt_dim=cfg.embed_scale)
+    mask = None
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
+        mask = _prefix_mask(h.shape[1], patch_embeds.shape[1])
     enc_out = None
     if cfg.encoder_layers:
         enc_out = encode(base, adapters, enc_embeds.astype(h.dtype), cfg)
-    positions = jnp.arange(s)[None]
+    s_tot = h.shape[1]
+    positions = jnp.arange(s_tot)[None]
     kinds = cfg.layer_kinds()
     pro, n_groups, epi = cfg.body_layout()
     p = cfg.scan_period
     cache: Dict = {"prologue": [], "epilogue": []}
     if enc_out is not None:
-        cache["enc_out"] = enc_out
+        cache["enc_len"] = jnp.full((b,), enc_out.shape[1], jnp.int32)
 
     def run(h, b_, a_, kind):
         return _prefill_block(
             h, b_, a_, cfg, *kind, positions=positions, max_len=max_len,
-            enc_out=enc_out,
+            enc_out=enc_out, mask=mask,
         )
 
     for i in range(pro):
@@ -684,7 +755,7 @@ def prefill(
 
 def _decode_block(
     h, cache_l, pos, b, a_, cfg: ModelConfig, mixer: str, ffn: str,
-    enc_out=None,
+    enc_len=None,
 ):
     a_ = a_ or {}
     x = _norm(h, b["norm1"], cfg)
@@ -704,12 +775,16 @@ def _decode_block(
     else:
         raise ValueError(mixer)
     h = h + mix
-    if "xattn" in b and enc_out is not None:
+    if "xattn" in b and enc_len is not None:
         x = _norm(h, b["norm_x"], cfg)
-        h = h + A.attention(
-            x, b["xattn"], a_.get("xattn"),
-            _attn_cfg(cfg, "attn", cross=True), cfg.adapter, kv_input=enc_out,
+        h = h + A.cross_attention_cached(
+            x, cache_l, enc_len, b["xattn"], a_.get("xattn"),
+            _attn_cfg(cfg, "attn", cross=True), cfg.adapter,
         )
+        # cross K/V lines are frozen after admission — carry them forward
+        new_cache = dict(new_cache)
+        new_cache["xk"] = cache_l["xk"]
+        new_cache["xv"] = cache_l["xv"]
     if ffn in ("mlp", "moe"):
         x = _norm(h, b["norm2"], cfg)
         if ffn == "mlp":
@@ -738,14 +813,14 @@ def decode_step(
     kinds = cfg.layer_kinds()
     pro, n_groups, epi = cfg.body_layout()
     p = cfg.scan_period
-    enc_out = cache.get("enc_out")
+    enc_len = cache.get("enc_len")
     new_cache: Dict = {"prologue": [], "epilogue": []}
-    if enc_out is not None:
-        new_cache["enc_out"] = enc_out
+    if enc_len is not None:
+        new_cache["enc_len"] = enc_len
     for i in range(pro):
         h, c = _decode_block(
             h, cache["prologue"][i], pos, base["prologue"][i],
-            adapters["prologue"][i], cfg, *kinds[i], enc_out=enc_out,
+            adapters["prologue"][i], cfg, *kinds[i], enc_len=enc_len,
         )
         new_cache["prologue"].append(c)
     if n_groups:
@@ -757,7 +832,7 @@ def decode_step(
             for j in range(p):
                 h, c = _decode_block(
                     h, cs[j], pos, bs[j], as_[j], cfg, *body_kinds[j],
-                    enc_out=enc_out,
+                    enc_len=enc_len,
                 )
                 new_cs.append(c)
             return h, new_cs
@@ -769,12 +844,156 @@ def decode_step(
     for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
         h, c = _decode_block(
             h, cache["epilogue"][j], pos, base["epilogue"][j],
-            adapters["epilogue"][j], cfg, *kinds[i], enc_out=enc_out,
+            adapters["epilogue"][j], cfg, *kinds[i], enc_len=enc_len,
         )
         new_cache["epilogue"].append(c)
     h = _norm(h, base["final_norm"], cfg)
     logits = _lm_head(h, base, adapters, cfg)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (admission interleaved with decode ticks)
+# ---------------------------------------------------------------------------
+#
+# ``prefill_chunk`` advances a live decode cache by one fixed-size prompt
+# chunk — the engine splits long prompts into bucketed chunks so
+# admission never stalls in-flight slots and the jit cache stays bounded
+# (a handful of chunk buckets instead of one program per prompt length).
+# Only attention mixers chunk: SSM/RG-LRU recurrences are computed with
+# ``associative_scan`` whose regrouping is length-dependent, so those
+# configs keep the fused exact-length prefill.
+
+
+def _chunk_block(
+    h, cache_l, pos0, n_valid, b, a_, cfg: ModelConfig, mixer: str, ffn: str,
+    *, enc_len=None, max_len: int, prefix: int = 0,
+):
+    a_ = a_ or {}
+    x = _norm(h, b["norm1"], cfg)
+    if mixer not in ("attn", "local", "swa"):
+        raise ValueError(
+            f"chunked prefill supports attention mixers only, got {mixer!r}"
+        )
+    acfg = _attn_cfg(cfg, mixer)
+    mix, new_kv = A.chunk_attention(
+        x, cache_l, pos0, n_valid, b["mixer"], a_.get("mixer"), acfg,
+        cfg.adapter, max_len=max_len, prefix=prefix,
+    )
+    new_cache = {**cache_l, **new_kv}
+    h = h + mix
+    if "xattn" in b and enc_len is not None:
+        x = _norm(h, b["norm_x"], cfg)
+        h = h + A.cross_attention_cached(
+            x, cache_l, enc_len, b["xattn"], a_.get("xattn"),
+            _attn_cfg(cfg, "attn", cross=True), cfg.adapter,
+        )
+    if ffn in ("mlp", "moe"):
+        x = _norm(h, b["norm2"], cfg)
+        if ffn == "mlp":
+            h = h + L.mlp(x, b["ffn"], a_.get("ffn"), cfg.mlp, cfg.adapter)
+        else:
+            h = h + M.moe_block(x, b["ffn"], a_.get("ffn"), cfg.moe, cfg.adapter)
+    return h, new_cache
+
+
+def _chunk_stack(
+    params, h, cache, pos0, n_valid, cfg: ModelConfig, max_len: int,
+    prefix: int,
+):
+    """Walk the layer stack applying ``_chunk_block``; returns (h, cache)
+    with the final norm applied to ``h``."""
+    base, adapters = params["base"], params["adapters"]
+    if not adapters:
+        adapters = _empty_adapters(base)
+    kinds = cfg.layer_kinds()
+    pro, n_groups, epi = cfg.body_layout()
+    p = cfg.scan_period
+    enc_len = cache.get("enc_len")
+    new_cache: Dict = {"prologue": [], "epilogue": []}
+    if enc_len is not None:
+        new_cache["enc_len"] = enc_len
+
+    def run(h, cache_l, b_, a_, kind):
+        return _chunk_block(
+            h, cache_l, pos0, n_valid, b_, a_, cfg, *kind,
+            enc_len=enc_len, max_len=max_len, prefix=prefix,
+        )
+
+    for i in range(pro):
+        h, c = run(h, cache["prologue"][i], base["prologue"][i],
+                   adapters["prologue"][i], kinds[i])
+        new_cache["prologue"].append(c)
+    if n_groups:
+        body_kinds = [kinds[pro + j] for j in range(p)]
+
+        def group(h, xs):
+            bs, as_, cs = xs
+            new_cs = []
+            for j in range(p):
+                h, c = run(h, cs[j], bs[j], as_[j], body_kinds[j])
+                new_cs.append(c)
+            return h, new_cs
+
+        h, body_cache = jax.lax.scan(
+            group, h, (base["body"], adapters.get("body"), cache["body"])
+        )
+        new_cache["body"] = body_cache
+    for j, i in enumerate(range(cfg.n_layers - epi, cfg.n_layers)):
+        h, c = run(h, cache["epilogue"][j], base["epilogue"][j],
+                   adapters["epilogue"][j], kinds[i])
+        new_cache["epilogue"].append(c)
+    h = _norm(h, base["final_norm"], cfg)
+    return h, new_cache
+
+
+def prefill_chunk(
+    params: Dict,
+    tokens: jax.Array,  # (B, C) int32 — bucketed chunk, zero-padded tail
+    cache: Dict,
+    pos0: jax.Array,  # (B,) absolute position of tokens[:, 0]
+    n_valid: jax.Array,  # (B,) real tokens in the chunk
+    cfg: ModelConfig,
+    max_len: int,
+    prefix: int = 0,  # static vision-prefix extent (0 for text-only)
+) -> Tuple[jax.Array, Dict]:
+    """Advance a decode cache by one prompt chunk. Returns the logits at
+    the chunk's last *valid* position ``(B, 1, vocab)`` and the updated
+    cache — bitwise the fused ``prefill`` of the same tokens (pinned in
+    tests/test_engine.py)."""
+    base = params["base"]
+    b, _ = tokens.shape
+    pos0 = A._as_pos_vector(pos0, b)
+    n_valid = A._as_pos_vector(n_valid, b)
+    h = L.embed(tokens, base["embed"], scale_by_sqrt_dim=cfg.embed_scale)
+    h, new_cache = _chunk_stack(
+        params, h, cache, pos0, n_valid, cfg, max_len, prefix
+    )
+    rows = jnp.arange(b)
+    h_last = h[rows, n_valid - 1][:, None]  # (B, 1, d)
+    adapters = params["adapters"] or _empty_adapters(base)
+    logits = _lm_head(h_last, base, adapters, cfg)
+    return logits, new_cache
+
+
+def prefill_vision(
+    params: Dict,
+    patch_embeds: jax.Array,  # (B, P, d)
+    cache: Dict,
+    cfg: ModelConfig,
+    max_len: int,
+) -> Dict:
+    """Admit a vision prefix into a decode cache: the P patch positions
+    attend bidirectionally among themselves (prefix-LM), text chunks and
+    decode ticks then start at ``pos0 = P``. One static shape per config
+    (P = cfg.vision_tokens), so this compiles exactly once."""
+    b, p_, _ = patch_embeds.shape
+    h = patch_embeds.astype(cfg.dtype)
+    pos0 = jnp.zeros((b,), jnp.int32)
+    n_valid = jnp.full((b,), p_, jnp.int32)
+    _, new_cache = _chunk_stack(params, h, cache, pos0, n_valid, cfg,
+                                max_len, prefix=p_)
+    return new_cache
 
 
 # ---------------------------------------------------------------------------

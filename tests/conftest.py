@@ -1,3 +1,23 @@
+import gc
+
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop compiled XLA executables when a test module finishes.
+
+    Every live executable holds several process memory mappings; across
+    the whole suite the accumulated programs (decode/prefill step
+    registry, calibration steps, kernels...) blow past the kernel's
+    vm.max_map_count default (65530) and later compilations die with
+    SIGSEGV inside XLA. Modules are compile-disjoint (different configs
+    and step shapes), so clearing at module boundaries bounds the map
+    count without perturbing any within-module retrace counter.
+    """
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -12,19 +12,23 @@ from repro.deploy import Deployment, ServeEngine, serving
 from repro.models import transformer as T
 
 
-def _reference(session, prompt, gen_len, temperature=0.0, key=None):
+def _reference(session, prompt, gen_len, temperature=0.0, key=None,
+               enc_embeds=None, patch_embeds=None):
     """Per-request reference: the single-stream generate loop, one call
     per prompt (batch 1) — what the engine must reproduce bitwise."""
     with session.scope():
         toks, _ = serving.generate(
             session.params, jnp.asarray(prompt, jnp.int32)[None, :],
             session.cfg, gen_len=gen_len, temperature=temperature, key=key,
+            enc_embeds=None if enc_embeds is None else enc_embeds[None],
+            patch_embeds=None if patch_embeds is None else patch_embeds[None],
         )
     return list(np.asarray(toks)[0])
 
 
 def _ragged_staggered_check(arch, backend, *, max_len, prompt_lens, gen_len,
-                            temperature=0.9):
+                            temperature=0.9, enc_lens=None, vision=False,
+                            **engine_kw):
     cfg = get_arch(arch).smoke
     session = Deployment.program(cfg, 0, backend=backend).serve()
     prompts = [
@@ -33,18 +37,38 @@ def _ragged_staggered_check(arch, backend, *, max_len, prompt_lens, gen_len,
         ))
         for i, n in enumerate(prompt_lens)
     ]
+    encs = [None] * len(prompts)
+    if enc_lens is not None:
+        encs = [
+            np.asarray(jax.random.normal(
+                jax.random.PRNGKey(200 + i), (n, cfg.d_model), cfg.dtype
+            ))
+            for i, n in enumerate(enc_lens)
+        ]
+        engine_kw.setdefault("src_len", max(enc_lens))
+    patches = [None] * len(prompts)
+    if vision:
+        patches = [
+            np.asarray(jax.random.normal(
+                jax.random.PRNGKey(300 + i), (cfg.vision_tokens, cfg.d_model),
+                cfg.dtype,
+            ))
+            for i in range(len(prompts))
+        ]
     keys = [jax.random.PRNGKey(100 + i) for i in range(len(prompts))]
     refs = [
-        _reference(session, p, gen_len, temperature, k)
-        for p, k in zip(prompts, keys)
+        _reference(session, p, gen_len, temperature, k,
+                   enc_embeds=e, patch_embeds=v)
+        for p, k, e, v in zip(prompts, keys, encs, patches)
     ]
     # fewer slots than requests, admissions at different ticks -> the
     # engine must interleave rows at different clocks and recycle slots
-    engine = ServeEngine(session, max_slots=2, max_len=max_len)
+    engine = ServeEngine(session, max_slots=2, max_len=max_len, **engine_kw)
     reqs = []
-    for i, (p, k) in enumerate(zip(prompts, keys)):
+    for i, (p, k, e, v) in enumerate(zip(prompts, keys, encs, patches)):
         reqs.append(
-            engine.submit(p, max_new=gen_len, temperature=temperature, key=k)
+            engine.submit(p, max_new=gen_len, temperature=temperature, key=k,
+                          enc_embeds=e, patch_embeds=v)
         )
         engine.step()
         engine.step()
@@ -52,6 +76,8 @@ def _ragged_staggered_check(arch, backend, *, max_len, prompt_lens, gen_len,
     for i, (req, ref) in enumerate(zip(reqs, refs)):
         assert req.done
         assert req.tokens == ref, f"request {i}: {req.tokens} != {ref}"
+    assert engine.generated_tokens == sum(len(r.tokens) for r in reqs)
+    return engine, reqs
 
 
 @pytest.mark.parametrize("backend", ["dequant", "codes"])
@@ -235,13 +261,201 @@ def test_key_with_zero_temperature_raises():
         engine.submit(prompt[0], max_new=2, key=jax.random.PRNGKey(0))
 
 
-def test_engine_rejects_oversized_request_and_encdec():
+def test_engine_submit_validation():
     cfg = get_arch("qwen3_1_7b").smoke
     session = Deployment.program(cfg, 0).serve()
     engine = ServeEngine(session, max_slots=1, max_len=8)
     with pytest.raises(ValueError, match="max_len"):
         engine.submit(np.zeros(6, np.int32), max_new=4)
+    with pytest.raises(ValueError, match="decoder-only"):
+        engine.submit(np.zeros(2, np.int32), max_new=2,
+                      enc_embeds=np.zeros((4, cfg.d_model), np.float32))
+    with pytest.raises(ValueError, match="vision_tokens"):
+        engine.submit(np.zeros(2, np.int32), max_new=2,
+                      patch_embeds=np.zeros((4, cfg.d_model), np.float32))
     enc_cfg = get_arch("seamless_m4t_large_v2").smoke
     enc_session = Deployment.program(enc_cfg, 0).serve()
-    with pytest.raises(NotImplementedError):
-        ServeEngine(enc_session)
+    with pytest.raises(ValueError, match="src_len"):
+        ServeEngine(enc_session)  # enc-dec engine needs the encoder extent
+    enc_engine = ServeEngine(enc_session, max_slots=1, max_len=16, src_len=4)
+    with pytest.raises(ValueError, match="enc_embeds"):
+        enc_engine.submit(np.zeros(2, np.int32), max_new=2)
+    with pytest.raises(ValueError, match="src_len"):
+        enc_engine.submit(
+            np.zeros(2, np.int32), max_new=2,
+            enc_embeds=np.zeros((6, enc_cfg.d_model), np.float32),
+        )
+    vis_cfg = get_arch("paligemma_3b").smoke
+    vis_session = Deployment.program(vis_cfg, 0).serve()
+    vis_engine = ServeEngine(vis_session, max_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="vision tokens"):
+        vis_engine.submit(
+            np.zeros(2, np.int32), max_new=2,
+            patch_embeds=np.zeros((3, vis_cfg.d_model), np.float32),
+        )
+    # the vision prefix counts against max_len: 8 + 5 + 4 > 16
+    with pytest.raises(ValueError, match="max_len"):
+        vis_engine.submit(
+            np.zeros(5, np.int32), max_new=4,
+            patch_embeds=np.zeros(
+                (vis_cfg.vision_tokens, vis_cfg.d_model), np.float32
+            ),
+        )
+
+
+@pytest.mark.parametrize("backend", ["dequant", "codes"])
+def test_ragged_staggered_parity_encdec(backend):
+    """seamless smoke through the engine: per-slot cross-attention cache
+    lines, ragged encoder lengths masked per slot by enc_len — bitwise
+    vs per-request generate."""
+    _ragged_staggered_check(
+        "seamless_m4t_large_v2", backend, max_len=24,
+        prompt_lens=[5, 9, 3], gen_len=5, enc_lens=[3, 4, 2],
+        prefill_chunk=4, min_bucket=4,
+    )
+
+
+@pytest.mark.parametrize("backend", ["dequant", "codes"])
+def test_ragged_staggered_parity_vision(backend):
+    """paligemma smoke through the engine: image-prefix admission (the
+    8 patch positions prefill bidirectionally ahead of the text chunks,
+    clocks offset by vision_tokens) — bitwise vs generate."""
+    _ragged_staggered_check(
+        "paligemma_3b", backend, max_len=32,
+        prompt_lens=[6, 10], gen_len=5, vision=True,
+        prefill_chunk=4, min_bucket=4,
+    )
+
+
+def test_chunked_prefill_matches_fused_admission():
+    """Chunk width is a scheduling knob, not a numerics knob: the same
+    prompt admitted through 2-token chunks and through one fused span
+    generates identical tokens."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(5), (11,), 0, cfg.vocab)
+    )
+    outs = []
+    for chunk in (2, 16):
+        engine = ServeEngine(
+            session, max_slots=1, max_len=24, prefill_chunk=chunk,
+            min_bucket=2, prefix_cache_entries=0,
+        )
+        req = engine.submit(prompt, max_new=6)
+        engine.run()
+        outs.append(req.tokens)
+    assert outs[0] == outs[1]
+
+
+def test_prefix_cache_hit_is_bitwise_and_counted():
+    """A request whose prompt shares a stored prefix resumes from the
+    snapshot — tokens bitwise-identical to a cold admission, hits
+    visible in stats(), and full hits skip prefill chunks entirely."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    shared = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(8), (8,), 0, cfg.vocab)
+    )
+    tail = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(9), (5,), 0, cfg.vocab)
+    )
+    long = np.concatenate([shared, tail])
+    cold_refs = {
+        n: _reference(session, p, 5) for n, p in
+        [("shared", shared), ("long", long)]
+    }
+    engine = ServeEngine(
+        session, max_slots=1, max_len=32, prefill_chunk=4, min_bucket=4
+    )
+    r1 = engine.submit(shared, max_new=5)
+    engine.run()
+    assert r1.tokens == cold_refs["shared"] and r1.prefix_hit_tokens == 0
+    chunks_cold = engine.prefill_chunks
+    # exact resubmission: full snapshot hit, zero prefill chunks run
+    r2 = engine.submit(shared, max_new=5)
+    engine.run()
+    assert r2.tokens == cold_refs["shared"]
+    assert r2.prefix_hit_tokens == len(shared)
+    assert engine.prefix_hits == 1 and engine.prefill_chunks == chunks_cold
+    # shared system prompt + new tail: partial hit at the chunk boundary
+    r3 = engine.submit(long, max_new=5)
+    engine.run()
+    assert r3.tokens == cold_refs["long"]
+    assert r3.prefix_hit_tokens == len(shared)
+    assert engine.prefix_partial_hits == 1
+    st = engine.stats()
+    assert st["prefix_lookups"] == 3 and st["prefix_hits"] == 1
+
+
+def test_prefix_cache_full_hit_nonchunked():
+    """SSM stacks don't chunk (recurrence regrouping), but an exact
+    prompt resubmission still reuses the fused-prefill snapshot."""
+    cfg = get_arch("falcon_mamba_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(4), (7,), 0, cfg.vocab)
+    )
+    ref = _reference(session, prompt, 4)
+    engine = ServeEngine(session, max_slots=1, max_len=16)
+    r1 = engine.submit(prompt, max_new=4)
+    engine.run()
+    r2 = engine.submit(prompt, max_new=4)
+    engine.run()
+    assert r1.tokens == ref and r2.tokens == ref
+    assert engine.prefix_hits == 1 and r2.prefix_hit_tokens == 7
+
+
+def test_chunk_bucketing_pins_compile_ceiling():
+    """Pow-2 chunk buckets bound the jit cache: once the bucket set is
+    warm, NEW ragged prompt lengths compile nothing."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    engine = ServeEngine(
+        session, max_slots=2, max_len=64, prefill_chunk=8, min_bucket=4,
+        prefix_cache_entries=0,
+    )
+
+    def toks(n, seed):
+        return np.asarray(
+            jax.random.randint(jax.random.PRNGKey(seed), (n,), 0, cfg.vocab)
+        )
+
+    # warm the full bucket set {4, 8}: a sub-bucket tail and full chunks
+    for n in (3, 12):
+        engine.submit(toks(n, n), max_new=2)
+    engine.run()
+    warm = engine.compile_count()
+    assert warm > 0
+    # six unseen prompt lengths -> same buckets, zero new programs
+    for n in (2, 5, 7, 9, 17, 23):
+        engine.submit(toks(n, 100 + n), max_new=2)
+    engine.run()
+    assert engine.compile_count() == warm
+
+
+def test_engine_accounting_unified_retirement():
+    """first_tokens/decode_tokens/completed stay consistent across every
+    exit path — max_new=1, first-token EOS, and normal retirement all
+    satisfy generated_tokens == first + decode == sum(emitted)."""
+    cfg = get_arch("qwen3_1_7b").smoke
+    session = Deployment.program(cfg, 0).serve()
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(2), (5,), 0, cfg.vocab)
+    )
+    ref = _reference(session, prompt, 6)
+    engine = ServeEngine(session, max_slots=2, max_len=16)
+    r_one = engine.submit(prompt, max_new=1)          # retires at admission
+    r_eos = engine.submit(prompt, max_new=6, eos_id=ref[0])  # first tok EOS
+    r_full = engine.submit(prompt, max_new=6)
+    engine.run()
+    assert r_one.done and r_one.tokens == ref[:1]
+    assert r_eos.done and r_eos.tokens == ref[:1]
+    assert r_full.done and r_full.tokens == ref
+    assert r_one.ttft_seconds is not None and r_eos.ttft_seconds is not None
+    st = engine.stats()
+    emitted = sum(len(r.tokens) for r in (r_one, r_eos, r_full))
+    assert st["first_tokens"] == 3
+    assert st["completed"] == 3
+    assert st["generated_tokens"] == st["first_tokens"] + st["decode_tokens"]
+    assert st["generated_tokens"] == emitted

@@ -104,8 +104,8 @@ def test_decode_matches_forward_encdec():
     full = T.forward(params, batch, cfg, use_adapters=False)
     cache = T.init_cache(cfg, B, S, src_len=S)
     adapters = T._empty_adapters(params["adapters"])
-    cache["enc_out"] = T.encode(params["base"], adapters, batch["enc_embeds"], cfg)
     p = {"base": params["base"], "adapters": adapters}
+    cache = T.encode_into_cache(p, cache, batch["enc_embeds"], cfg)
     outs = []
     for i in range(S):
         logits, cache = T.decode_step(
